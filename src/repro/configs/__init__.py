@@ -1,0 +1,1 @@
+from repro.configs.base import ARCHS, SHAPES, ModelConfig, get_config, get_smoke_config  # noqa: F401

@@ -1,0 +1,14 @@
+"""FTFI core: the paper's contribution as composable JAX modules."""
+from repro.core.cordial import (  # noqa: F401
+    AnyFn, CordialFn, ExpPoly, ExpQuadratic, ExpRational, Exponential,
+    Polynomial, Rational, Trigonometric,
+)
+from repro.core.integrate import (  # noqa: F401
+    BTFI, FTFI, IntegrationPlan, compile_plan, execute_plan,
+    chebyshev_batched_matvec, polynomial_batched_matvec,
+)
+from repro.core.integrator_tree import build_integrator_tree, it_stats  # noqa: F401
+from repro.core.toeplitz import (  # noqa: F401
+    causal_toeplitz_matvec, symmetric_toeplitz_matvec, toeplitz_dense,
+)
+from repro.core import masks  # noqa: F401

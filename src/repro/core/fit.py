@@ -1,0 +1,119 @@
+"""Sec 4.3: learnable f-distance matrices on tree metrics.
+
+Given a graph G and a spanning tree T, learn a rational f so that
+f(d_T(v,w)) ~= d_G(v,w), training on a tiny sample of vertex pairs
+(O(100) data points, as in the paper) and evaluating with the relative
+Frobenius error eps = ||M_f^T - M_id^G||_F / ||M_id^G||_F.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.graph import Graph, WeightedTree
+from repro.graphs.mst import minimum_spanning_tree
+from repro.graphs.traverse import TreeLCA, dijkstra, tree_all_pairs, graph_all_pairs
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def rational_apply(params, x):
+    """f(x) = poly(num)(x) / (softplus-stabilized poly(den)(x))."""
+    num, den = params["num"], params["den"]
+    n = jnp.zeros_like(x)
+    for c in num[::-1]:
+        n = n * x + c
+    d = jnp.zeros_like(x)
+    for c in den[::-1]:
+        d = d * x + c
+    return n / (1e-6 + jax.nn.softplus(d))
+
+
+def sample_training_pairs(g: Graph, tree: WeightedTree, num_pairs: int,
+                          seed: int = 0):
+    """Tuples (v, w, d_G(v,w), d_T(v,w)). d_G from Dijkstra on sampled
+    sources (each data point is O(N log N), as the paper notes)."""
+    rng = np.random.default_rng(seed)
+    lca = TreeLCA(tree)
+    srcs = rng.integers(0, g.num_vertices, size=max(1, num_pairs // 8))
+    vs, ws, dg, dt = [], [], [], []
+    per_src = int(np.ceil(num_pairs / srcs.size))
+    for s in srcs:
+        dist_s = dijkstra(g, int(s))
+        tgts = rng.integers(0, g.num_vertices, size=per_src)
+        for t in tgts:
+            if t == s:
+                continue
+            vs.append(int(s)); ws.append(int(t)); dg.append(dist_s[t])
+    vs, ws = np.array(vs), np.array(ws)
+    dt = lca.distance(vs, ws)
+    return vs, ws, np.array(dg), dt
+
+
+@dataclasses.dataclass
+class FitResult:
+    params: dict
+    losses: np.ndarray
+    rel_frobenius: float | None = None
+
+
+def fit_rational_f(g: Graph, tree: WeightedTree | None = None,
+                   num_deg: int = 2, den_deg: int = 2, num_pairs: int = 100,
+                   steps: int = 500, lr: float = 5e-2, seed: int = 0,
+                   eval_frobenius: bool = False) -> FitResult:
+    if tree is None:
+        tree = minimum_spanning_tree(g)
+    vs, ws, d_g, d_t = sample_training_pairs(g, tree, num_pairs, seed)
+    scale = max(float(d_t.max()), 1e-9)
+    xs = jnp.asarray(d_t / scale, jnp.float32)
+    ys = jnp.asarray(d_g / scale, jnp.float32)
+
+    params = {
+        "num": jnp.asarray(np.r_[0.0, 1.0, np.zeros(max(num_deg - 1, 0))], jnp.float32),
+        "den": jnp.asarray(np.r_[1.0, np.zeros(den_deg)], jnp.float32),
+    }
+
+    cfg = AdamWConfig(lr=lr, weight_decay=0.0, warmup_steps=10, total_steps=steps,
+                      clip_norm=10.0)
+    state = adamw_init(params)
+
+    def loss_fn(p):
+        pred = rational_apply(p, xs)
+        return jnp.mean((pred - ys) ** 2)
+
+    @jax.jit
+    def step(p, s):
+        l, grads = jax.value_and_grad(loss_fn)(p)
+        p, s, _ = adamw_update(grads, s, p, cfg)
+        return p, s, l
+
+    losses = []
+    for _ in range(steps):
+        params, state, l = step(params, state)
+        losses.append(float(l))
+
+    res = FitResult(params={k: np.asarray(v) for k, v in params.items()},
+                    losses=np.array(losses))
+    if eval_frobenius:
+        res.rel_frobenius = relative_frobenius_error(g, tree, params, scale)
+    return res
+
+
+def relative_frobenius_error(g: Graph, tree: WeightedTree, params, scale: float
+                             ) -> float:
+    """eps = ||f(D_T) - D_G||_F / ||D_G||_F (O(N^2): evaluation only)."""
+    D_t = tree_all_pairs(tree)
+    D_g = graph_all_pairs(g)
+    pred = np.asarray(rational_apply(
+        {k: jnp.asarray(v) for k, v in params.items()},
+        jnp.asarray(D_t / scale, jnp.float32))) * 1.0
+    return float(np.linalg.norm(pred * scale - D_g) / np.linalg.norm(D_g))
+
+
+def tree_metric_frobenius_error(g: Graph, tree: WeightedTree) -> float:
+    """Baseline: identity f (raw tree metric) error."""
+    D_t = tree_all_pairs(tree)
+    D_g = graph_all_pairs(g)
+    return float(np.linalg.norm(D_t - D_g) / np.linalg.norm(D_g))

@@ -1,0 +1,415 @@
+"""Tree-field integration: BTFI oracle, recursive FTFI, and the jit plan.
+
+Correctness invariant (proved in comments below, tested in tests/test_core.py):
+the *additive* decomposition counts every ordered pair (v, j) exactly once.
+
+  At internal node nu with children L, R sharing pivot p:
+    - recursion on L covers pairs L x L; on R covers R x R;
+    - the two cross jobs cover (L\\{p}) x (R\\{p}) and (R\\{p}) x (L\\{p})
+      (targets and sources both exclude the pivot);
+    - the only overlap is the diagonal pair (p, p), counted twice ->
+      one correction of -f(0) X[p] per internal node.
+  Across the whole IT: two distinct leaves intersect in at most one vertex
+  (a shared pivot), so off-diagonal pairs are never double counted by leaves;
+  a pair (u, v), u != v is separated at exactly one IT node (their "meet"),
+  so it is covered by exactly one cross job or exactly one leaf; diagonal
+  pairs (v, v) appear once per leaf containing v = 1 + #(nodes where v is
+  pivot), matched by the per-node corrections.
+
+The recursive evaluator follows the paper's Eq. 2-4 verbatim (pivot kept in
+the source group, subtracted via the f(left-d[tau(v)]) X'[0] correction); the
+plan executor uses the optimized masked-source form. Both are validated
+against the dense BTFI oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.cordial import CordialFn, chebyshev_points, lagrange_matrix
+from repro.core.integrator_tree import ITNode, build_integrator_tree
+from repro.graphs.graph import WeightedTree
+from repro.graphs.traverse import tree_all_pairs
+
+
+# ----------------------------------------------------------------------------
+# BTFI: brute-force oracle (paper's baseline)
+# ----------------------------------------------------------------------------
+
+
+class BTFI:
+    """Materialize M_f = f(all-pairs tree distances); multiply densely."""
+
+    def __init__(self, tree: WeightedTree, dtype=np.float64):
+        self.dists = tree_all_pairs(tree, dtype=dtype)  # O(N^2) preprocessing
+
+    def integrate(self, fn: Callable, X: np.ndarray) -> np.ndarray:
+        return fn(self.dists) @ X
+
+
+# ----------------------------------------------------------------------------
+# FTFI: recursive exact integrator (host / numpy)
+# ----------------------------------------------------------------------------
+
+
+class FTFI:
+    """Fast tree-field integrator. Preprocessing = IT construction (once);
+    `integrate(fn, X)` is exact for any CordialFn."""
+
+    def __init__(self, tree: WeightedTree, leaf_size: int = 64, seed: int = 0):
+        self.n = tree.num_vertices
+        self.root = build_integrator_tree(tree, leaf_size=leaf_size, seed=seed)
+
+    def integrate(self, fn: CordialFn, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X)
+        squeeze = X.ndim == 1
+        if squeeze:
+            X = X[:, None]
+        # preserve float32 fields: the walk is bandwidth-bound, so dtype
+        # halves/doubles end-to-end time for wide fields (e.g. GW plans)
+        acc_dtype = X.dtype if X.dtype in (np.float32, np.float64) else np.float64
+        out = np.zeros_like(X, dtype=acc_dtype)
+        self._walk(self.root, fn, X, out)
+        return out[:, 0] if squeeze else out
+
+    def _walk(self, node: ITNode, fn: CordialFn, X: np.ndarray, out: np.ndarray):
+        if node.is_leaf:
+            out[node.vertex_ids] += fn(node.leaf_dists) @ X[node.vertex_ids]
+            return
+        p = node.pivot
+        if not hasattr(node, "_seg"):
+            # cache sorted orders + run boundaries once per IT (np.add.at is
+            # ~50x slower than reduceat for wide fields, e.g. GW transports)
+            node._seg = {}
+            for side, ids, idd in (("L", node.left_ids, node.left_id_d),
+                                   ("R", node.right_ids, node.right_id_d)):
+                order = np.argsort(idd, kind="stable")
+                sorted_idd = idd[order]
+                starts = np.flatnonzero(
+                    np.r_[True, sorted_idd[1:] != sorted_idd[:-1]])
+                node._seg[side] = (ids[order], starts)
+        for side_src, tgt_ids, tgt_id_d, tgt_d, src_d in (
+            ("R", node.left_ids, node.left_id_d, node.left_d, node.right_d),
+            ("L", node.right_ids, node.right_id_d, node.right_d, node.left_d),
+        ):
+            # X'[u] = sum over source vertices in distance-group u (Eq. 3);
+            # the pivot IS included (group 0), per the paper.
+            src_sorted, starts = node._seg[side_src]
+            Xp = np.add.reduceat(X[src_sorted], starts, axis=0).astype(out.dtype)
+            # cross values per target distance-group: C @ X' (Eq. 4)
+            cross = fn.matvec(tgt_d, src_d, Xp)  # (U_tgt, d)
+            # Eq. 4 correction: remove the source-pivot column f(tgt_d) X'[0]
+            corr = fn(tgt_d)[:, None] * Xp[0][None, :]
+            vals = cross - corr
+            # targets exclude the pivot (tgt_ids[0] == pivot by construction)
+            out[tgt_ids[1:]] += vals[tgt_id_d[1:]]
+        out[p] -= fn.f0 * X[p]  # diagonal (p, p) double-count correction
+        self._walk(node.left, fn, X, out)
+        self._walk(node.right, fn, X, out)
+
+
+# ----------------------------------------------------------------------------
+# Exponential-kernel specialization: two-pass message passing (beyond-paper)
+# ----------------------------------------------------------------------------
+
+
+class ExpMP:
+    """Exact integrator for f(x) = scale * exp(lam * x) on a weighted tree
+    via the classic up/down sweep:
+
+      up[v]   = X_v + sum_c e^{lam w_c} up[c]          (subtree mass)
+      down[c] = e^{lam w_c} (down[p] + up[p] - e^{lam w_c} up[c])
+      out[v]  = up[v] + down[v]
+
+    Two passes over (N, d) — bandwidth-optimal, O(N d) time, no IT needed.
+    The multiplicative decomposability that makes this possible is exactly
+    the paper's rank-1 cordiality of exp, pushed to its limit."""
+
+    def __init__(self, tree: WeightedTree, root: int = 0):
+        from repro.graphs.traverse import tree_bfs_order
+
+        order, parent, parent_w = tree_bfs_order(tree, root)
+        self.order = order
+        self.parent = parent
+        self.parent_w = parent_w
+
+    def integrate(self, lam: float, X: np.ndarray, scale: float = 1.0):
+        X = np.asarray(X)
+        squeeze = X.ndim == 1
+        if squeeze:
+            X = X[:, None]
+        order, parent, w = self.order, self.parent, self.parent_w
+        e = np.exp(lam * w)  # per-vertex edge factor to parent
+        up = X.astype(X.dtype if X.dtype in (np.float32, np.float64)
+                      else np.float64).copy()
+        for v in order[::-1]:
+            pv = parent[v]
+            if pv >= 0:
+                up[pv] += e[v] * up[v]
+        down = np.zeros_like(up)
+        for v in order[1:]:
+            pv = parent[v]
+            down[v] = e[v] * (down[pv] + up[pv] - e[v] * up[v])
+        out = scale * (up + down)
+        return out[:, 0] if squeeze else out
+
+
+# ----------------------------------------------------------------------------
+# Plan compilation: flatten the IT into padded, bucketed, static arrays
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CrossBucket:
+    # all arrays are padded to the bucket maxima; PAD vertex id == n (dummy row)
+    tgt_ids: np.ndarray  # (B, K_t) int
+    tgt_id_d: np.ndarray  # (B, K_t) int (index into tgt_d)
+    tgt_mask: np.ndarray  # (B, K_t) bool
+    tgt_d: np.ndarray  # (B, U_t) float
+    tgt_d_mask: np.ndarray  # (B, U_t)
+    src_ids: np.ndarray  # (B, K_s)
+    src_id_d: np.ndarray  # (B, K_s)
+    src_mask: np.ndarray  # (B, K_s)
+    src_d: np.ndarray  # (B, U_s)
+    src_d_mask: np.ndarray  # (B, U_s)
+
+
+@dataclasses.dataclass
+class LeafBucket:
+    ids: np.ndarray  # (B, K)
+    mask: np.ndarray  # (B, K)
+    dists: np.ndarray  # (B, K, K)
+
+
+@dataclasses.dataclass
+class IntegrationPlan:
+    n: int
+    cross_buckets: list
+    leaf_buckets: list
+    pivots: np.ndarray  # (P,) vertex ids, one per internal node (with repeats)
+    grid_h: float | None = None  # common distance grid (if any) for hankel engine
+
+    def num_jobs(self):
+        return sum(b.tgt_ids.shape[0] for b in self.cross_buckets)
+
+
+def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
+                 detect_grid_spacing: bool = True) -> IntegrationPlan:
+    root = build_integrator_tree(tree, leaf_size=leaf_size, seed=seed)
+    n = tree.num_vertices
+    jobs = []  # (tgt_ids_nopivot, tgt_id_d, tgt_d, src_ids_nopivot, src_id_d, src_d)
+    leaves = []
+    pivots = []
+
+    def walk(node: ITNode):
+        if node.is_leaf:
+            leaves.append((node.vertex_ids, node.leaf_dists))
+            return
+        pivots.append(node.pivot)
+        for t_ids, t_idd, t_d, s_ids, s_idd, s_d in (
+            (node.left_ids, node.left_id_d, node.left_d,
+             node.right_ids, node.right_id_d, node.right_d),
+            (node.right_ids, node.right_id_d, node.right_d,
+             node.left_ids, node.left_id_d, node.left_d),
+        ):
+            # drop pivot from targets AND sources (masked-source optimization)
+            jobs.append((t_ids[1:], t_idd[1:], t_d, s_ids[1:], s_idd[1:], s_d))
+        walk(node.left)
+        walk(node.right)
+
+    walk(root)
+
+    # --- bucket cross jobs by ceil(log2(max dim)) => <=2x padding waste
+    def bkey(job):
+        m = max(job[0].size, job[3].size, 2)
+        return int(np.ceil(np.log2(m)))
+
+    buckets: dict[int, list] = {}
+    for job in jobs:
+        buckets.setdefault(bkey(job), []).append(job)
+
+    cross_buckets = []
+    for key in sorted(buckets):
+        bjobs = buckets[key]
+        Kt = max(j[0].size for j in bjobs)
+        Ut = max(j[2].size for j in bjobs)
+        Ks = max(j[3].size for j in bjobs)
+        Us = max(j[5].size for j in bjobs)
+        B = len(bjobs)
+        cb = CrossBucket(
+            tgt_ids=np.full((B, Kt), n, dtype=np.int32),
+            tgt_id_d=np.zeros((B, Kt), dtype=np.int32),
+            tgt_mask=np.zeros((B, Kt), dtype=bool),
+            tgt_d=np.zeros((B, Ut), dtype=np.float64),
+            tgt_d_mask=np.zeros((B, Ut), dtype=bool),
+            src_ids=np.full((B, Ks), n, dtype=np.int32),
+            src_id_d=np.zeros((B, Ks), dtype=np.int32),
+            src_mask=np.zeros((B, Ks), dtype=bool),
+            src_d=np.zeros((B, Us), dtype=np.float64),
+            src_d_mask=np.zeros((B, Us), dtype=bool),
+        )
+        for b, (t_ids, t_idd, t_d, s_ids, s_idd, s_d) in enumerate(bjobs):
+            kt, ut, ks, us = t_ids.size, t_d.size, s_ids.size, s_d.size
+            cb.tgt_ids[b, :kt] = t_ids
+            cb.tgt_id_d[b, :kt] = t_idd
+            cb.tgt_mask[b, :kt] = True
+            cb.tgt_d[b, :ut] = t_d
+            cb.tgt_d_mask[b, :ut] = True
+            cb.src_ids[b, :ks] = s_ids
+            cb.src_id_d[b, :ks] = s_idd
+            cb.src_mask[b, :ks] = True
+            cb.src_d[b, :us] = s_d
+            cb.src_d_mask[b, :us] = True
+        cross_buckets.append(cb)
+
+    # --- single leaf bucket
+    leaf_buckets = []
+    if leaves:
+        K = max(ids.size for ids, _ in leaves)
+        B = len(leaves)
+        lb = LeafBucket(
+            ids=np.full((B, K), n, dtype=np.int32),
+            mask=np.zeros((B, K), dtype=bool),
+            dists=np.zeros((B, K, K), dtype=np.float64),
+        )
+        for b, (ids, D) in enumerate(leaves):
+            k = ids.size
+            lb.ids[b, :k] = ids
+            lb.mask[b, :k] = True
+            lb.dists[b, :k, :k] = D
+        leaf_buckets.append(lb)
+
+    h = None
+    if detect_grid_spacing:
+        from repro.core.cordial import detect_grid
+        all_d = np.concatenate(
+            [np.concatenate([j[2], j[5]]) for j in jobs] or [np.zeros(1)])
+        h = detect_grid(all_d, np.zeros(1))
+    return IntegrationPlan(
+        n=n, cross_buckets=cross_buckets, leaf_buckets=leaf_buckets,
+        pivots=np.asarray(pivots, dtype=np.int32), grid_h=h)
+
+
+# ----------------------------------------------------------------------------
+# Plan executor (jax): additive, static shapes, differentiable
+# ----------------------------------------------------------------------------
+
+
+def execute_plan(plan: IntegrationPlan, X, fn_eval: Callable,
+                 batched_matvec: Callable | None = None, degree: int = 32):
+    """Integrate field X (n, d) with scalar function `fn_eval` (jnp-traceable).
+
+    batched_matvec(tgt_d, tgt_d_mask, src_d, src_d_mask, Xp) -> (B, U_t, d):
+    structured multiply per node; defaults to batched Chebyshev interpolation
+    (spectral-exact for smooth fn_eval), differentiable w.r.t. fn_eval params.
+    """
+    import jax.numpy as jnp
+
+    if batched_matvec is None:
+        batched_matvec = lambda *a: chebyshev_batched_matvec(fn_eval, *a, degree=degree)
+
+    X = jnp.asarray(X)
+    squeeze = X.ndim == 1
+    if squeeze:
+        X = X[:, None]
+    d = X.shape[1]
+    Xpad = jnp.concatenate([X, jnp.zeros((1, d), X.dtype)], axis=0)
+    out = jnp.zeros_like(Xpad)
+
+    for lb in plan.leaf_buckets:
+        Xl = Xpad[lb.ids]  # (B, K, d)
+        M = fn_eval(jnp.asarray(lb.dists))  # (B, K, K)
+        pair_mask = lb.mask[:, :, None] & lb.mask[:, None, :]
+        M = jnp.where(jnp.asarray(pair_mask), M, 0.0)
+        contrib = jnp.einsum("bij,bjd->bid", M, Xl)
+        out = out.at[lb.ids].add(contrib * lb.mask[:, :, None])
+
+    for cb in plan.cross_buckets:
+        B, Us = cb.src_d.shape
+        Xs = Xpad[cb.src_ids] * cb.src_mask[:, :, None]  # (B, Ks, d)
+        Xp = jnp.zeros((B, Us, d), Xs.dtype)
+        bidx = jnp.arange(B)[:, None]
+        Xp = Xp.at[bidx, cb.src_id_d].add(Xs)  # masked segment sum (Eq. 3)
+        cross = batched_matvec(
+            jnp.asarray(cb.tgt_d), jnp.asarray(cb.tgt_d_mask),
+            jnp.asarray(cb.src_d), jnp.asarray(cb.src_d_mask), Xp)  # (B, Ut, d)
+        vals = cross[bidx, cb.tgt_id_d]  # (B, Kt, d)
+        out = out.at[cb.tgt_ids].add(vals * cb.tgt_mask[:, :, None])
+
+    # diagonal corrections: -f(0) X[p] once per internal node
+    f0 = fn_eval(jnp.zeros((1,)))[0]
+    out = out.at[plan.pivots].add(-f0 * Xpad[plan.pivots])
+
+    res = out[:-1]
+    return res[:, 0] if squeeze else res
+
+
+def chebyshev_batched_matvec(fn_eval, tgt_d, tgt_mask, src_d, src_mask, Xp,
+                             degree: int = 32):
+    """Batched low-rank multiply via per-node 2D Chebyshev interpolation."""
+    import jax.numpy as jnp
+
+    big = 1e30
+    x_lo = jnp.min(jnp.where(tgt_mask, tgt_d, big), axis=1)  # (B,)
+    x_hi = jnp.max(jnp.where(tgt_mask, tgt_d, -big), axis=1)
+    y_lo = jnp.min(jnp.where(src_mask, src_d, big), axis=1)
+    y_hi = jnp.max(jnp.where(src_mask, src_d, -big), axis=1)
+    r = degree
+    k = np.arange(r)
+    t = np.cos((2 * k + 1) * np.pi / (2 * r))  # (r,)
+    xc = (x_lo[:, None] + x_hi[:, None]) / 2 + (x_hi - x_lo)[:, None] / 2 * t  # (B, r)
+    yc = (y_lo[:, None] + y_hi[:, None]) / 2 + (y_hi - y_lo)[:, None] / 2 * t
+    Bmat = fn_eval(xc[:, :, None] + yc[:, None, :])  # (B, r, r)
+    Lx = _lagrange_batched(tgt_d, xc)  # (B, Kx, r)
+    Ly = _lagrange_batched(src_d, yc)  # (B, Ky, r)
+    tmp = jnp.einsum("bkr,bkd->brd", Ly, Xp)
+    tmp = jnp.einsum("bqr,brd->bqd", Bmat, tmp)
+    return jnp.einsum("bkq,bqd->bkd", Lx, tmp)
+
+
+def _lagrange_batched(pts, nodes):
+    import jax.numpy as jnp
+
+    r = nodes.shape[1]
+    k = np.arange(r)
+    w = ((-1.0) ** k) * np.sin((2 * k + 1) * np.pi / (2 * r))  # (r,)
+    diff = pts[:, :, None] - nodes[:, None, :]  # (B, K, r)
+    small = jnp.abs(diff) < 1e-12
+    diff = jnp.where(small, 1.0, diff)
+    terms = w[None, None, :] / diff
+    L = terms / jnp.sum(terms, axis=-1, keepdims=True)
+    any_small = jnp.any(small, axis=-1, keepdims=True)
+    return jnp.where(any_small, small.astype(L.dtype), L)
+
+
+def polynomial_batched_matvec(coeffs, tgt_d, tgt_mask, src_d, src_mask, Xp):
+    """Exact batched multiply for f = polynomial(coeffs) — differentiable
+    w.r.t. coeffs. O((Kt+Ks) * deg) per node."""
+    import jax.numpy as jnp
+
+    coeffs = jnp.asarray(coeffs)
+    Bdeg = coeffs.shape[0] - 1
+    xpow = _powers_b(tgt_d, Bdeg)  # (B, Kt, deg+1)
+    ypow = _powers_b(src_d, Bdeg)  # (B, Ks, deg+1)
+    ypow = ypow * src_mask[:, :, None]
+    S = jnp.einsum("bku,bkd->bud", ypow, Xp)  # (B, deg+1, d)
+    import math as _m
+    Wrows = []
+    for l in range(Bdeg + 1):
+        acc = 0.0
+        for tt in range(l, Bdeg + 1):
+            acc = acc + coeffs[tt] * _m.comb(tt, l) * S[:, tt - l]
+        Wrows.append(acc)
+    W = jnp.stack(Wrows, axis=1)  # (B, deg+1, d)
+    return jnp.einsum("bkl,bld->bkd", xpow, W)
+
+
+def _powers_b(x, B):
+    import jax.numpy as jnp
+
+    pows = [jnp.ones_like(x)]
+    for _ in range(B):
+        pows.append(pows[-1] * x)
+    return jnp.stack(pows, axis=-1)

@@ -1,0 +1,191 @@
+"""Topological RPE masks for linear attention (paper Sec 4.4 + Alg. 1, App. C).
+
+The mask is M = [f(dist(i,j))] with f = g(sum_t a_t x^t) and (a_t) learnable —
+**3 extra scalars** per layer (synced) or per head (asynced). FastMult_M:
+  - sequences (LM archs): Toeplitz FFT, exact for any f (core.toeplitz);
+  - grids/graphs (ViT):   IT-plan executor, exact engines (core.integrate).
+
+Decode: for separable f (g=exp & t<=1, or g=identity polynomial), the cross
+term f(i-j) = sum_r alpha_r(i) beta_r(j) splits, so masked linear attention
+admits an O(1)-per-token recurrent state (beyond-paper; DESIGN §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.toeplitz import causal_toeplitz_matvec, symmetric_toeplitz_matvec
+
+
+# ----------------------------------------------------------------------------
+# learnable f
+# ----------------------------------------------------------------------------
+
+GS = {
+    "exp": lambda z: jnp.exp(z),
+    "recip": lambda z: 1.0 / (1.0 + z * z),  # stabilized z -> z^{-1} family
+    "identity": lambda z: z,
+}
+
+
+def mask_f(g: str, coeffs, dist_scale: float = 1.0) -> Callable:
+    """f(x) = g(sum_t coeffs[..., t] * (x * dist_scale)^t). coeffs may carry
+    leading batch (head) dims; result broadcasts accordingly."""
+
+    def f(x):
+        z = 0.0
+        xs = x * dist_scale
+        c = jnp.asarray(coeffs)
+        for t in range(c.shape[-1] - 1, -1, -1):
+            z = z * xs + c[..., t, None] if c.ndim > 1 else z * xs + c[..., t]
+        return GS[g](z)
+
+    return f
+
+
+def sequence_mask_values(g: str, coeffs, L: int, dist_scale: float = 1.0):
+    """F[..., k] = f(k) for k = 0..L-1 (token path metric)."""
+    ks = jnp.arange(L, dtype=jnp.float32) * dist_scale
+    c = jnp.asarray(coeffs)
+    z = jnp.zeros(c.shape[:-1] + (L,), jnp.float32)
+    for t in range(c.shape[-1] - 1, -1, -1):
+        z = z * ks + c[..., t : t + 1]
+    return GS[g](z)
+
+
+# ----------------------------------------------------------------------------
+# Algorithm 1 (App. C): general efficient low-rank masked attention
+# ----------------------------------------------------------------------------
+
+
+def masked_linear_attention(q_feat, k_feat, v, fastmult: Callable, eps=1e-6):
+    """Alg. 1. q_feat/k_feat: (..., L, m) nonneg features, v: (..., L, d);
+    fastmult(X): applies M to the L axis of X (..., L, c). Returns (..., L, d).
+    """
+    L, m = q_feat.shape[-2], q_feat.shape[-1]
+    d = v.shape[-1]
+    v1 = (k_feat[..., :, :, None] * v[..., :, None, :]).reshape(
+        v.shape[:-1] + (m * d,))  # rows vec(phi(k_i) v_i^T)
+    d1 = fastmult(v1)  # (..., L, m*d)
+    d2 = fastmult(k_feat)  # (..., L, m)
+    num = jnp.einsum("...lm,...lmd->...ld",
+                     q_feat, d1.reshape(d1.shape[:-1] + (m, d)))
+    den = jnp.einsum("...lm,...lm->...l", q_feat, d2)
+    den = jnp.where(jnp.abs(den) < eps, eps, den)
+    return num / den[..., None]
+
+
+def masked_attention_bruteforce(q_feat, k_feat, v, mask, eps=1e-6):
+    """Oracle: A = M ⊙ (phi(Q) phi(K)^T); O(L^2 d). Tests only."""
+    A = jnp.einsum("...lm,...km->...lk", q_feat, k_feat) * mask
+    den = jnp.sum(A, axis=-1)
+    den = jnp.where(jnp.abs(den) < eps, eps, den)
+    return jnp.einsum("...lk,...kd->...ld", A, v) / den[..., None]
+
+
+# ----------------------------------------------------------------------------
+# sequence (Toeplitz) fastmult factories
+# ----------------------------------------------------------------------------
+
+
+def make_sequence_fastmult(g: str, coeffs, L: int, causal: bool,
+                           dist_scale: float = 1.0) -> Callable:
+    F = sequence_mask_values(g, coeffs, L, dist_scale)  # (..., L)
+
+    def fastmult(X):
+        if causal:
+            return causal_toeplitz_matvec(F, X)
+        return symmetric_toeplitz_matvec(F, X)
+
+    return fastmult
+
+
+# ----------------------------------------------------------------------------
+# cordial decode states: O(1)-per-token masked linear attention (causal)
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CordialDecomposition:
+    """f(i - j) = sum_r alpha_r(i) beta_r(j): per-term callables evaluated on
+    integer positions (float32)."""
+
+    num_terms: int
+    alpha: Callable  # (pos (...,),) -> (..., R)
+    beta: Callable
+
+
+def cordial_decomposition(g: str, coeffs, dist_scale: float = 1.0
+                          ) -> CordialDecomposition:
+    coeffs = np.asarray(coeffs, dtype=np.float32)
+    T = coeffs.shape[-1] - 1
+    if g == "exp" and T <= 1:
+        # exp(a0 + a1 (i-j)s) = [e^{a0} e^{a1 s i}] * [e^{-a1 s j}]
+        a0 = coeffs[..., 0]
+        a1 = coeffs[..., 1] if T == 1 else np.zeros_like(coeffs[..., 0])
+
+        def alpha(pos):
+            return (np.exp(a0) * jnp.exp(a1 * dist_scale * pos))[..., None]
+
+        def beta(pos):
+            return jnp.exp(-a1 * dist_scale * pos)[..., None]
+
+        return CordialDecomposition(1, alpha, beta)
+    if g == "identity":
+        # poly(i-j) = sum_t a_t sum_l C(t,l) i^l (-j)^{t-l}: terms (l, t-l)
+        # consolidated by l: alpha_l(i) = i^l, beta_l(j) = sum_{t>=l} a_t C(t,l) (-j)^{t-l}
+        R = T + 1
+
+        def alpha(pos):
+            ps = pos * dist_scale
+            return jnp.stack([ps ** l for l in range(R)], axis=-1)
+
+        def beta(pos):
+            ps = pos * dist_scale
+            outs = []
+            for l in range(R):
+                acc = 0.0
+                for t in range(l, T + 1):
+                    acc = acc + coeffs[..., t] * math.comb(t, l) * (-ps) ** (t - l)
+                outs.append(acc)
+            return jnp.stack(outs, axis=-1)
+
+        return CordialDecomposition(R, alpha, beta)
+    raise ValueError(
+        f"g={g!r}, degree={T}: not exactly separable; use the Toeplitz path "
+        "(chunked prefill) or g in {'exp' (deg<=1), 'identity'}")
+
+
+def decode_state_init(decomp: CordialDecomposition, m: int, d: int,
+                      batch_shape=(), dtype=jnp.float32):
+    """S: (..., R, m, d) cross-moment states; z: (..., R, m) normalizers."""
+    R = decomp.num_terms
+    return (jnp.zeros(batch_shape + (R, m, d), dtype),
+            jnp.zeros(batch_shape + (R, m), dtype))
+
+
+def decode_state_update(decomp, state, pos, k_feat, v):
+    """Absorb token at integer position `pos`: k_feat (..., m), v (..., d)."""
+    S, z = state
+    b = decomp.beta(jnp.asarray(pos, jnp.float32))  # (R,) or (..., R)
+    b = jnp.broadcast_to(b, S.shape[:-2])  # (..., R)
+    S = S + b[..., None, None] * (k_feat[..., None, :, None] * v[..., None, None, :])
+    z = z + b[..., None] * k_feat[..., None, :]
+    return (S, z)
+
+
+def decode_state_read(decomp, state, pos, q_feat, eps=1e-6):
+    """Masked linear attention output for the query at position `pos`."""
+    S, z = state
+    a = decomp.alpha(jnp.asarray(pos, jnp.float32))
+    a = jnp.broadcast_to(a, S.shape[:-2])  # (..., R)
+    num = jnp.einsum("...m,...rmd,...r->...d", q_feat, S, a)
+    den = jnp.einsum("...m,...rm,...r->...", q_feat, z, a)
+    den = jnp.where(jnp.abs(den) < eps, eps, den)
+    return num / den[..., None]

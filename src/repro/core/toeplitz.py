@@ -1,0 +1,56 @@
+"""FFT fastmult for sequence (path-metric) f-distance masks.
+
+For the 10 assigned LM architectures the token metric is dist(i,j) = |i-j|
+(path graph = its own MST), so M = [f(|i-j|)] is symmetric Toeplitz and
+M_causal = [f(i-j)]_{i>=j} is lower-triangular Toeplitz. Both multiply in
+O(L log L) exactly for ANY f via circulant embedding — the TPU-native
+specialization of the paper's Hankel/unit-weight result (App. A.2.3).
+
+All functions operate on the -2 axis of V (..., L, d) with mask values
+F (..., L) broadcastable against V's batch dims, and are differentiable in F
+(so the paper's learnable-f masks train end-to-end).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << int(np.ceil(np.log2(max(n, 2))))
+
+
+def causal_toeplitz_matvec(F, V):
+    """out[..., i, :] = sum_{j<=i} F[..., i-j] V[..., j, :].
+
+    Lower-triangular Toeplitz multiply == causal convolution (FFT, exact).
+    """
+    L = V.shape[-2]
+    n = _next_pow2(2 * L)
+    Ff = jnp.fft.rfft(F, n=n, axis=-1)  # (..., n//2+1)
+    Vf = jnp.fft.rfft(V, n=n, axis=-2)  # (..., n//2+1, d)
+    out = jnp.fft.irfft(Ff[..., None] * Vf, n=n, axis=-2)
+    return out[..., :L, :].astype(V.dtype)
+
+
+def symmetric_toeplitz_matvec(F, V):
+    """out[..., i, :] = sum_j F[..., |i-j|] V[..., j, :] (bidirectional mask)."""
+    L = V.shape[-2]
+    n = _next_pow2(2 * L)
+    # circulant first column: c[k] = F[k] (k < L), c[n-k] = F[k] (1 <= k < L)
+    zeros_mid = jnp.zeros(F.shape[:-1] + (n - 2 * L + 1,), F.dtype)
+    c = jnp.concatenate([F, zeros_mid, F[..., :0:-1]], axis=-1)  # (..., n)
+    Cf = jnp.fft.rfft(c, axis=-1)
+    Vf = jnp.fft.rfft(V, n=n, axis=-2)
+    out = jnp.fft.irfft(Cf[..., None] * Vf, n=n, axis=-2)
+    return out[..., :L, :].astype(V.dtype)
+
+
+def toeplitz_dense(F, L: int, causal: bool):
+    """Dense mask materialization — oracle for tests / tiny L."""
+    idx = jnp.arange(L)
+    dist = idx[:, None] - idx[None, :]
+    if causal:
+        vals = jnp.take(F, jnp.clip(dist, 0, F.shape[-1] - 1), axis=-1)
+        return jnp.where(dist >= 0, vals, 0.0)
+    return jnp.take(F, jnp.abs(dist), axis=-1)

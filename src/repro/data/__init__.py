@@ -1,0 +1,1 @@
+from repro.data.synthetic import SyntheticLMStream  # noqa: F401

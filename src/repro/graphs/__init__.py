@@ -1,0 +1,11 @@
+"""Graph substrate: weighted graphs/trees, MST, traversals, mesh generators."""
+from repro.graphs.graph import Graph, WeightedTree  # noqa: F401
+from repro.graphs.mst import minimum_spanning_tree  # noqa: F401
+from repro.graphs.traverse import (  # noqa: F401
+    TreeLCA,
+    tree_distances_from,
+    tree_pair_distances,
+    tree_all_pairs,
+    dijkstra,
+    graph_all_pairs,
+)

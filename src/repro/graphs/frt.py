@@ -1,0 +1,83 @@
+"""FRT trees (Fakcharoenphol–Rao–Talwar 2004): randomized O(log n)-distortion
+hierarchically-separated tree embeddings — the paper's Fig-4 baseline.
+
+The HST's leaves are the graph vertices; internal nodes are cluster ids.
+Returned as a WeightedTree over (n_leaves + n_internal) vertices with
+`leaf_ids` mapping graph vertex -> tree vertex, so FTFI runs on it directly
+(field zero on internal nodes).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.graph import Graph, WeightedTree
+from repro.graphs.traverse import graph_all_pairs
+
+
+def frt_tree(g: Graph, seed: int = 0):
+    """Returns (tree, leaf_ids) — leaf_ids[v] is the tree vertex of graph
+    vertex v (identity: leaves occupy ids 0..n-1)."""
+    rng = np.random.default_rng(seed)
+    D = graph_all_pairs(g)
+    n = g.num_vertices
+    diam = float(D.max())
+    beta = float(rng.uniform(1.0, 2.0))
+    perm = rng.permutation(n)
+
+    # levels: delta_i = beta * 2^i ; top level has one cluster of radius >= diam
+    top = 0
+    while beta * (2.0 ** top) < diam:
+        top += 1
+
+    edges_u, edges_v, weights = [], [], []
+    next_id = n  # internal node ids start after the leaves
+
+    def build(members: np.ndarray, level: int) -> int:
+        """Returns the tree node id representing this cluster."""
+        nonlocal next_id
+        if members.size == 1:
+            return int(members[0])
+        if level < -60:  # duplicate points (zero distance): numeric guard
+            root = int(members[0])
+            for m in members[1:]:
+                edges_u.append(root)
+                edges_v.append(int(m))
+                weights.append(1e-12)
+            return root
+        node = next_id
+        next_id += 1
+        delta_child = beta * (2.0 ** (level - 1))
+        # edge weight = parent's delta: guarantees d_T(u,v) >= 2*delta_level
+        # >= d_G(u,v) for pairs separated at this level (domination)
+        w_edge = beta * (2.0 ** level)
+        # partition: each member joins the first center (in perm order)
+        # within distance delta_child
+        assigned = np.full(members.size, -1, dtype=np.int64)
+        for rank, c in enumerate(perm):
+            mask = (assigned == -1) & (D[c, members] < delta_child)
+            assigned[mask] = rank
+            if (assigned != -1).all():
+                break
+        for rank in np.unique(assigned):
+            sub = members[assigned == rank]
+            child = build(sub, level - 1)
+            edges_u.append(node)
+            edges_v.append(child)
+            weights.append(w_edge)
+        return node
+
+    root = build(np.arange(n), top)
+    tree = WeightedTree(next_id, np.array(edges_u), np.array(edges_v),
+                        np.array(weights))
+    return tree, np.arange(n)
+
+
+def frt_integrate(g: Graph, fn, X: np.ndarray, seed: int = 0, leaf_size=64):
+    """f-integration of a leaf field using the FRT tree metric."""
+    from repro.core.integrate import FTFI
+
+    tree, leaf_ids = frt_tree(g, seed)
+    Xfull = np.zeros((tree.num_vertices,) + X.shape[1:], dtype=X.dtype)
+    Xfull[leaf_ids] = X
+    out = FTFI(tree, leaf_size=leaf_size).integrate(fn, Xfull)
+    return out[leaf_ids]

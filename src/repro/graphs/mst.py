@@ -1,0 +1,51 @@
+"""Kruskal minimum spanning tree with union-find (numpy, O(E log E))."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.graph import Graph, WeightedTree
+
+
+class _UnionFind:
+    def __init__(self, n: int):
+        self.parent = np.arange(n, dtype=np.int64)
+        self.rank = np.zeros(n, dtype=np.int8)
+
+    def find(self, x: int) -> int:
+        p = self.parent
+        root = x
+        while p[root] != root:
+            root = p[root]
+        while p[x] != root:  # path compression
+            p[x], x = root, p[x]
+        return root
+
+    def union(self, a: int, b: int) -> bool:
+        ra, rb = self.find(a), self.find(b)
+        if ra == rb:
+            return False
+        if self.rank[ra] < self.rank[rb]:
+            ra, rb = rb, ra
+        self.parent[rb] = ra
+        if self.rank[ra] == self.rank[rb]:
+            self.rank[ra] += 1
+        return True
+
+
+def minimum_spanning_tree(g: Graph) -> WeightedTree:
+    """Kruskal MST. Raises if the graph is disconnected."""
+    order = np.argsort(g.weights, kind="stable")
+    uf = _UnionFind(g.num_vertices)
+    keep = np.zeros(g.num_edges, dtype=bool)
+    taken = 0
+    for e in order:
+        if uf.union(int(g.edges_u[e]), int(g.edges_v[e])):
+            keep[e] = True
+            taken += 1
+            if taken == g.num_vertices - 1:
+                break
+    if taken != g.num_vertices - 1:
+        raise ValueError("graph is disconnected: MST does not exist")
+    return WeightedTree(
+        g.num_vertices, g.edges_u[keep], g.edges_v[keep], g.weights[keep]
+    )

@@ -1,0 +1,89 @@
+"""Fused f-distance matvec Pallas kernel — the paper's core operation.
+
+Computes out[i, :] = sum_j f(x_i + y_j) * V[j, :] WITHOUT materializing the
+(a, b) matrix M = [f(x_i + y_j)] in HBM: each grid step builds one
+(blk_a, blk_b) tile of M on the fly in VMEM from the 1-D distance vectors
+and feeds it straight into the MXU. This is the TPU-native reading of the
+paper's LDR insight — structure means "recompute cheaply instead of
+storing" (DESIGN §3): HBM traffic drops from O(a*b) to O(a + b + b*d).
+
+f families supported in-kernel (static `mode`):
+  poly     — f(s) = sum_t coeffs[t] s^t            (Sec 3.2.1, 0-cordial)
+  exp      — f(s) = coeffs[1] * exp(coeffs[0]*s)   (rank-1 family)
+  expq     — f(s) = exp(u s^2 + v s + w)           (best ViT variant)
+  rational — f(s) = 1 / (1 + coeffs[0] * s^2)      (mesh interpolation)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _f_tile(s, coeffs, mode: str):
+    if mode == "poly":
+        acc = jnp.zeros_like(s)
+        for t in range(coeffs.shape[0] - 1, -1, -1):
+            acc = acc * s + coeffs[t]
+        return acc
+    if mode == "exp":
+        return coeffs[1] * jnp.exp(coeffs[0] * s)
+    if mode == "expq":
+        return jnp.exp(coeffs[0] * s * s + coeffs[1] * s + coeffs[2])
+    if mode == "rational":
+        return 1.0 / (1.0 + coeffs[0] * s * s)
+    raise ValueError(mode)
+
+
+def _fdist_kernel(x_ref, y_ref, v_ref, c_ref, o_ref, acc_ref, *,
+                  mode: str, nb: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s = x_ref[...] + y_ref[...]  # (blk_a, 1) + (1, blk_b) -> (blk_a, blk_b)
+    m = _f_tile(s, c_ref[...], mode)  # tile of M — exists only in VMEM
+    acc_ref[...] += jnp.dot(m, v_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(j == nb - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "blk_a", "blk_b",
+                                             "interpret"))
+def fdist_matvec_pallas(x, y, v, coeffs, *, mode: str = "poly",
+                        blk_a: int = 256, blk_b: int = 256,
+                        interpret: bool = False):
+    """x: (a,), y: (b,), v: (b, d), coeffs: (k,) -> out (a, d)."""
+    a, b = x.shape[0], y.shape[0]
+    d = v.shape[1]
+    blk_a = min(blk_a, a)
+    blk_b = min(blk_b, b)
+    pad_a = (-a) % blk_a
+    pad_b = (-b) % blk_b
+    xp = jnp.pad(x.astype(jnp.float32), (0, pad_a)).reshape(-1, 1)
+    yp = jnp.pad(y.astype(jnp.float32), (0, pad_b)).reshape(1, -1)
+    vp = jnp.pad(v.astype(jnp.float32), ((0, pad_b), (0, 0)))
+    na = (a + pad_a) // blk_a
+    nb = (b + pad_b) // blk_b
+    out = pl.pallas_call(
+        functools.partial(_fdist_kernel, mode=mode, nb=nb),
+        grid=(na, nb),
+        in_specs=[
+            pl.BlockSpec((blk_a, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, blk_b), lambda i, j: (0, j)),
+            pl.BlockSpec((blk_b, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((coeffs.shape[0],), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk_a, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((a + pad_a, d), v.dtype),
+        scratch_shapes=[pltpu.VMEM((blk_a, d), jnp.float32)],
+        interpret=interpret,
+    )(xp, yp, vp, coeffs.astype(jnp.float32))
+    return out[:a]

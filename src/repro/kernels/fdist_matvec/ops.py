@@ -1,0 +1,15 @@
+"""Jit'd public wrapper: picks the Pallas kernel on TPU, interpret-mode
+(= Python execution of the same kernel body) elsewhere for validation."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fdist_matvec.kernel import fdist_matvec_pallas
+from repro.kernels.fdist_matvec.ref import fdist_matvec_ref
+
+
+def fdist_matvec(x, y, v, coeffs, mode: str = "poly", blk_a: int = 256,
+                 blk_b: int = 256):
+    on_tpu = jax.default_backend() == "tpu"
+    return fdist_matvec_pallas(x, y, v, coeffs, mode=mode, blk_a=blk_a,
+                               blk_b=blk_b, interpret=not on_tpu)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused f-distance matvec kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def f_eval(s, coeffs, mode: str):
+    if mode == "poly":
+        acc = jnp.zeros_like(s)
+        for t in range(coeffs.shape[0] - 1, -1, -1):
+            acc = acc * s + coeffs[t]
+        return acc
+    if mode == "exp":
+        return coeffs[1] * jnp.exp(coeffs[0] * s)
+    if mode == "expq":
+        return jnp.exp(coeffs[0] * s * s + coeffs[1] * s + coeffs[2])
+    if mode == "rational":
+        return 1.0 / (1.0 + coeffs[0] * s * s)
+    raise ValueError(mode)
+
+
+def fdist_matvec_ref(x, y, v, coeffs, mode: str = "poly"):
+    s = x.astype(jnp.float32)[:, None] + y.astype(jnp.float32)[None, :]
+    m = f_eval(s, coeffs.astype(jnp.float32), mode)
+    return (m @ v.astype(jnp.float32)).astype(v.dtype)

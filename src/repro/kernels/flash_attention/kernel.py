@@ -1,0 +1,85 @@
+"""Causal flash attention (forward) Pallas kernel.
+
+Online-softmax tiling: grid = (batch*heads, num_q_blocks); each step streams
+KV blocks through VMEM with running (max, sum, acc) statistics, so the
+(L, L) score matrix never exists. For causal masking the KV loop stops at
+the query block (work is triangular, not square).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, blk_q: int, blk_k: int,
+                  scale: float, causal: bool, seq_len: int):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale  # (blk_q, hd)
+    hd = q.shape[-1]
+    nk_total = seq_len // blk_k
+    if causal:
+        nk = jnp.minimum(((qi + 1) * blk_q + blk_k - 1) // blk_k, nk_total)
+    else:
+        nk = nk_total
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = k_ref[pl.ds(kb * blk_k, blk_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(kb * blk_k, blk_k), :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if causal:
+            qpos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                         (blk_q, blk_k), 0)
+            kpos = kb * blk_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                         (blk_q, blk_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((blk_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((blk_q,), jnp.float32)
+    a0 = jnp.zeros((blk_q, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, a0))
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, blk_q: int = 256,
+                           blk_k: int = 256, interpret: bool = False):
+    """q/k/v: (B, H, L, hd) -> (B, H, L, hd). L must divide by blocks."""
+    B, H, L, hd = q.shape
+    blk_q = min(blk_q, L)
+    blk_k = min(blk_k, L)
+    assert L % blk_q == 0 and L % blk_k == 0
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.reshape(B * H, L, hd)
+    kf = k.reshape(B * H, L, hd)
+    vf = v.reshape(B * H, L, hd)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, blk_q=blk_q, blk_k=blk_k,
+                          scale=scale, causal=causal, seq_len=L),
+        grid=(B * H, L // blk_q),
+        in_specs=[
+            pl.BlockSpec((None, blk_q, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, L, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, L, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, blk_q, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, L, hd), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, L, hd)

@@ -1,0 +1,11 @@
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention(q, k, v, causal: bool = True):
+    on_tpu = jax.default_backend() == "tpu"
+    return flash_attention_pallas(q, k, v, causal=causal,
+                                  interpret=not on_tpu)

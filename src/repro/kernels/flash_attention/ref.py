@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    B, H, L, hd = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        i = jnp.arange(L)
+        s = jnp.where(i[:, None] >= i[None, :], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,11 @@
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.linear_attention.kernel import linear_attention_pallas
+
+
+def linear_attention(qf, kf, v, log_gamma, chunk: int = 256):
+    on_tpu = jax.default_backend() == "tpu"
+    return linear_attention_pallas(qf, kf, v, log_gamma, chunk=chunk,
+                                   interpret=not on_tpu)

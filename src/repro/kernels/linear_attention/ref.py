@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: O(L^2) masked linear attention numerator/denominator."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_attention_ref(qf, kf, v, log_gamma):
+    B, H, L, m = qf.shape
+    i = jnp.arange(L)
+    lg = jnp.asarray(log_gamma, jnp.float32).reshape(1, -1, 1, 1)
+    mask = jnp.where(i[:, None] >= i[None, :],
+                     jnp.exp(lg * (i[:, None] - i[None, :])), 0.0)
+    scores = jnp.einsum("bhqm,bhkm->bhqk", qf.astype(jnp.float32),
+                        kf.astype(jnp.float32)) * mask
+    num = jnp.einsum("bhqk,bhkd->bhqd", scores, v.astype(jnp.float32))
+    den = jnp.sum(scores, axis=-1)
+    return num, den

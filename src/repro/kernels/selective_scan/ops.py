@@ -1,0 +1,11 @@
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.selective_scan.kernel import selective_scan_pallas
+
+
+def selective_scan(u, dt, A, B, C, D, chunk: int = 128, blk_d: int = 512):
+    on_tpu = jax.default_backend() == "tpu"
+    return selective_scan_pallas(u, dt, A, B, C, D, chunk=chunk, blk_d=blk_d,
+                                 interpret=not on_tpu)

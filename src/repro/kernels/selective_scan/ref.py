@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: sequential selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(u, dt, A, B, C, D):
+    Bt, L, din = u.shape
+    N = A.shape[1]
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp
+        dA = jnp.exp(dt_t[..., None] * A[None])  # (Bt, din, N)
+        h = dA * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.sum(h * c_t[:, None, :], axis=-1) + u_t * D[None]
+        return h, y
+
+    h0 = jnp.zeros((Bt, din, N), jnp.float32)
+    xs = (u.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          B.swapaxes(0, 1).astype(jnp.float32),
+          C.swapaxes(0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(u.dtype)

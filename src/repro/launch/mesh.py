@@ -1,0 +1,16 @@
+"""Production mesh construction (function, not module constant — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 2, model: int = 4):
+    """Small mesh over host devices for distribution integration tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

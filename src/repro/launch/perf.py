@@ -1,0 +1,82 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing driver: re-analyze a cell under config overrides and
+append (hypothesis, before/after roofline terms) to results/perf.json.
+
+  PYTHONPATH=src python -m repro.launch.perf --cell granite_34b:train_4k \
+      --tag chunked_attn --set attn_impl=chunked
+"""
+import argparse
+import json
+
+import jax
+
+from repro.configs.base import SHAPES
+from repro.launch.dryrun import analyze_cell, cell_config, extrapolated_cost, lower_cell_cfg
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import roofline_terms, collective_bytes_from_hlo
+
+
+def parse_val(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("true", "false"):
+        return v == "true"
+    return v
+
+
+def analyze_with_overrides(arch, shape, overrides, mesh):
+    cfg, note = cell_config(arch, shape, "auto")
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    # full-depth compile for memory analysis
+    lowered, compiled, _, _ = lower_cell_cfg(cfg, shape, mesh)
+    mem = compiled.memory_analysis()
+    rec = {
+        "arch": arch, "shape": shape, "overrides": overrides,
+        "peak_bytes_per_device": (getattr(mem, "argument_size_in_bytes", 0)
+                                  + getattr(mem, "output_size_in_bytes", 0)
+                                  + getattr(mem, "temp_size_in_bytes", 0)),
+    }
+    rec.update(extrapolated_cost(cfg, shape, mesh))
+    n_chips = int(mesh.devices.size)
+    rec["n_chips"] = n_chips
+    rec.update(roofline_terms(rec, cfg, SHAPES[shape], n_chips))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--out", default="results/perf.json")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_val(v)
+    mesh = make_production_mesh(multi_pod=False)
+    rec = analyze_with_overrides(arch, shape, overrides, mesh)
+    rec["tag"] = args.tag
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    results.append(rec)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(json.dumps({k: rec[k] for k in
+                      ("tag", "compute_s", "memory_s", "collective_s",
+                       "dominant", "useful_flops_ratio",
+                       "peak_bytes_per_device")}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Serving CLI:  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b
+   --smoke --requests 8 --max-new 16"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, get_smoke_config
+from repro.models import api
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--variant", default=None)
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    if args.smoke:
+        cfg = cfg.replace(dtype="float32")
+    if args.variant:
+        cfg = cfg.replace(attention_variant=args.variant,
+                          topo_dist_scale=1.0 / args.max_len)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_slots=args.slots,
+                      max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    for r in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, size=8).tolist()
+        eng.submit(Request(rid=r, prompt=prompt, max_new_tokens=args.max_new))
+    t0 = time.time()
+    ticks = eng.run()
+    dt = time.time() - t0
+    total_tokens = args.requests * args.max_new
+    print(f"served {args.requests} requests / {total_tokens} tokens in "
+          f"{ticks} ticks, {dt:.2f}s ({total_tokens/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) cell — the dry-run
+stand-ins (weak-type-correct, shardable, no device allocation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch.sharding import logical_to_spec
+from repro.models import api
+from repro.models.layers import dtype_of
+
+
+def batch_specs(cfg, shape_name: str):
+    """Input ShapeDtypeStructs for the step function of this cell."""
+    sh = SHAPES[shape_name]
+    B, L = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    i32 = jnp.int32
+    if kind in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((B, L), i32)}
+        if cfg.family == "vlm":
+            P_ = cfg.num_prefix_embeddings
+            batch["tokens"] = jax.ShapeDtypeStruct((B, L - P_), i32)
+            batch["patch_embeds"] = jax.ShapeDtypeStruct((B, P_, 1024), jnp.bfloat16)
+        if cfg.is_encdec:
+            batch["src_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.max_source_len, 1024), jnp.bfloat16)
+        return batch
+    # decode: one token + KV/state cache of length L
+    token = jax.ShapeDtypeStruct((B, 1), i32)
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, B, L))
+    pos = jax.ShapeDtypeStruct((), i32)
+    return {"token": token, "cache": cache, "pos": pos}
+
+
+def params_shapes(cfg):
+    return jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def batch_shardings(cfg, shape_name: str, mesh):
+    """NamedShardings for the batch pytree (batch dim over (pod, data))."""
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    dp = logical_to_spec(("batch",))[0]
+    seq = logical_to_spec(("seq_shard",))[0]
+
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    if kind in ("train", "prefill"):
+        out = {"tokens": ns(P(dp, None))}
+        if cfg.family == "vlm":
+            out["patch_embeds"] = ns(P(dp, None, None))
+        if cfg.is_encdec:
+            out["src_embeds"] = ns(P(dp, None, None))
+        return out
+    B = sh["global_batch"]
+    ndev_dp = 1
+    if dp is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        names = dp if isinstance(dp, tuple) else (dp,)
+        for n in names:
+            ndev_dp *= sizes[n]
+    batch_shardable = B % max(ndev_dp, 1) == 0 and B >= ndev_dp
+
+    def cache_spec(leaf):
+        # leaf leading dims: [layers?, batch, length/positions, ...]
+        nd = leaf.ndim
+        spec = [None] * nd
+        shp = leaf.shape
+        # find the batch dim: first dim equal to B
+        for i, s in enumerate(shp):
+            if s == B:
+                if batch_shardable:
+                    spec[i] = dp
+                elif i + 1 < nd and shp[i + 1] == sh["seq_len"]:
+                    spec[i + 1] = seq  # batch=1 long-context: shard sequence
+                break
+        # shard a heads-like dim over model where divisible
+        model_sz = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+        for i in range(nd - 1, 0, -1):
+            if spec[i] is None and shp[i] in (cfg.num_heads, cfg.num_kv_heads,
+                                              cfg.d_inner, cfg.lru_width):
+                if shp[i] % model_sz == 0:
+                    spec[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    cache = jax.tree.map(cache_spec, batch_specs(cfg, shape_name)["cache"])
+    return {
+        "token": ns(P(dp, None)) if batch_shardable else ns(P(None, None)),
+        "cache": cache,
+        "pos": ns(P()),
+    }

@@ -1,0 +1,41 @@
+"""Step functions lowered by the dry-run and driven by the train loop."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            loss, metrics = api.loss_fn(cfg, p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(grads, opt_state, params,
+                                                      opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        return api.prefill_fn(cfg, params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg, seq_len: int):
+    def serve_step(params, cache, token, pos):
+        logits, cache = api.decode_fn(cfg, params, cache, token, pos, seq_len)
+        new_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return new_token, cache
+
+    return serve_step

@@ -1,0 +1,43 @@
+"""Public model API: family dispatch for init / train / prefill / decode."""
+from __future__ import annotations
+
+import jax
+
+from repro.models import encdec, lm
+
+
+def init_params(cfg, key):
+    if cfg.is_encdec:
+        return encdec.init_params(cfg, key)
+    return lm.init_params(cfg, key)
+
+
+def loss_fn(cfg, params, batch):
+    """Returns (loss, metrics)."""
+    if cfg.is_encdec:
+        return encdec.forward_train(cfg, params, batch)
+    return lm.forward_train(cfg, params, batch)
+
+
+def prefill_fn(cfg, params, batch):
+    """Last-position logits (B, 1, V)."""
+    if cfg.is_encdec:
+        return encdec.forward_prefill(cfg, params, batch)
+    return lm.forward_prefill(cfg, params, batch)
+
+
+def init_cache(cfg, B, S):
+    if cfg.is_encdec:
+        return encdec.init_decode_cache(cfg, B, S)
+    return lm.init_decode_cache(cfg, B, S)
+
+
+def decode_fn(cfg, params, cache, token, pos, S):
+    """One decode step: (logits (B,1,V), new_cache)."""
+    if cfg.is_encdec:
+        return encdec.forward_decode(cfg, params, cache, token, pos, S)
+    return lm.forward_decode(cfg, params, cache, token, pos, S)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,192 @@
+"""Encoder–decoder transformer (seamless-m4t backbone; audio frontend stubbed).
+
+Encoder: bidirectional self-attn + MLP. Decoder: causal self-attn +
+cross-attn + MLP. Topological masking (paper) applies to both self-attention
+stacks (bidirectional Toeplitz on the encoder, causal on the decoder);
+cross-attention stays softmax — the two modalities share no tree metric
+(DESIGN §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import shard
+from repro.models import attention as A
+from repro.models.layers import (cross_entropy_loss, dense_init, dtype_of,
+                                 embed_init, gated_mlp, gated_mlp_init, rms_norm)
+
+
+def _enc_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn_norm": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+        "attn": A.attn_init(ks[0], cfg, dtype),
+        "mlp_norm": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+        "mlp": gated_mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+    if cfg.attention_variant == "topo":
+        p["topo"] = A.topo_init(ks[2], cfg, dtype)
+    return p
+
+
+def _dec_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 5)
+    p = _enc_block_init(ks[0], cfg, dtype)
+    p["cross_norm"] = {"scale": jnp.zeros((cfg.d_model,), dtype)}
+    p["cross_attn"] = A.attn_init(ks[1], cfg, dtype)
+    return p
+
+
+def init_params(cfg, key):
+    dtype = dtype_of(cfg)
+    V = cfg.padded_vocab()
+    ks = jax.random.split(key, 8)
+    enc = jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(
+        jax.random.split(ks[0], cfg.encoder_layers))
+    dec = jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(
+        jax.random.split(ks[1], cfg.decoder_layers))
+    return {
+        "frontend_proj": {"kernel": dense_init(ks[2], (1024, cfg.d_model),
+                                               dtype=dtype)},
+        "embed": embed_init(ks[3], V, cfg.d_model, dtype),
+        "blocks_enc": enc,
+        "blocks_dec": dec,
+        "enc_final_norm": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+        "final_norm": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+        "lm_head": {"kernel": dense_init(ks[4], (cfg.d_model, V), dtype=dtype)},
+    }
+
+
+def _self_attn(cfg, p, x, positions, causal):
+    h = rms_norm(x, p["attn_norm"]["scale"], cfg.norm_eps, plus_one=True)
+    if cfg.attention_variant == "topo":
+        return A.topo_attention_train(cfg, p["attn"], p["topo"], h, positions,
+                                      causal=causal)
+    if cfg.attention_variant == "performer":
+        return A.performer_attention_train(cfg, p["attn"], h, positions,
+                                           causal=causal)
+    return A.full_attention_train(cfg, p["attn"], h, positions, causal=causal)
+
+
+def encode(cfg, params, src_embeds):
+    """src_embeds: (B, S, 1024) stub frontend output -> (B, S, d)."""
+    x = src_embeds.astype(dtype_of(cfg)) @ params["frontend_proj"]["kernel"]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = shard(x, ("batch", "seq", "embed"))
+
+    def body(x, p):
+        x = x + _self_attn(cfg, p, x, positions, causal=False)
+        h = rms_norm(x, p["mlp_norm"]["scale"], cfg.norm_eps, plus_one=True)
+        x = x + gated_mlp(p["mlp"], h, cfg.mlp_act)
+        return shard(x, ("batch", "seq", "embed")), ()
+
+    body_r = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_r, x, params["blocks_enc"])
+    return rms_norm(x, params["enc_final_norm"]["scale"], cfg.norm_eps,
+                    plus_one=True)
+
+
+def _decode_stack(cfg, params, x, positions, memory, mem_positions):
+    def body(x, p):
+        x = x + _self_attn(cfg, p, x, positions, causal=True)
+        h = rms_norm(x, p["cross_norm"]["scale"], cfg.norm_eps, plus_one=True)
+        x = x + A.full_attention_train(cfg, p["cross_attn"], h, positions,
+                                       causal=False, rope=False,
+                                       kv_x=memory, kv_positions=mem_positions)
+        h = rms_norm(x, p["mlp_norm"]["scale"], cfg.norm_eps, plus_one=True)
+        x = x + gated_mlp(p["mlp"], h, cfg.mlp_act)
+        return shard(x, ("batch", "seq", "embed")), ()
+
+    body_r = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_r, x, params["blocks_dec"])
+    return x
+
+
+def forward_train(cfg, params, batch):
+    """batch: {'src_embeds': (B,S,1024), 'tokens': (B,L)}."""
+    memory = encode(cfg, params, batch["src_embeds"])
+    tokens = batch["tokens"]
+    B, L = tokens.shape
+    x = params["embed"]["table"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+    mem_positions = jnp.broadcast_to(
+        jnp.arange(memory.shape[1], dtype=jnp.int32)[None], memory.shape[:2])
+    x = _decode_stack(cfg, params, x, positions, memory, mem_positions)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps, plus_one=True)
+    logits = x @ params["lm_head"]["kernel"]
+    logits = shard(logits, ("batch", "seq", "vocab"))
+    loss = cross_entropy_loss(logits[:, :-1], tokens[:, 1:], cfg.padded_vocab())
+    return loss, {}
+
+
+def forward_prefill(cfg, params, batch):
+    memory = encode(cfg, params, batch["src_embeds"])
+    tokens = batch["tokens"]
+    B, L = tokens.shape
+    x = params["embed"]["table"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+    mem_positions = jnp.broadcast_to(
+        jnp.arange(memory.shape[1], dtype=jnp.int32)[None], memory.shape[:2])
+    x = _decode_stack(cfg, params, x, positions, memory, mem_positions)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps, plus_one=True)
+    return x[:, -1:, :] @ params["lm_head"]["kernel"]
+
+
+def init_decode_cache(cfg, B, S):
+    """Self-attn caches per decoder layer + precomputed cross K/V memory."""
+    dtype = dtype_of(cfg)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    n = cfg.decoder_layers
+    if cfg.attention_variant == "topo":
+        one = A.topo_decode_init(cfg, B, S)
+    elif cfg.attention_variant == "performer":
+        one = A.performer_decode_init(cfg, B)
+    else:
+        one = {"k": jnp.zeros((B, S, KV, hd), dtype),
+               "v": jnp.zeros((B, S, KV, hd), dtype)}
+    stack = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one)
+    Sm = cfg.max_source_len
+    return {
+        "self": stack,
+        "cross_k": jnp.zeros((n, B, Sm, KV, hd), dtype),
+        "cross_v": jnp.zeros((n, B, Sm, KV, hd), dtype),
+    }
+
+
+def forward_decode(cfg, params, cache, token, pos, S):
+    x = params["embed"]["table"][token]  # (B,1,d)
+    B = token.shape[0]
+    Sm = cache["cross_k"].shape[2]
+    mem_mask = jnp.ones((1, 1, 1, Sm), bool)
+
+    def body(x, pc):
+        p, c_self, ck, cv = pc
+        h = rms_norm(x, p["attn_norm"]["scale"], cfg.norm_eps, plus_one=True)
+        if cfg.attention_variant == "topo":
+            y, c_self = A.topo_attention_decode(cfg, p["attn"], p["topo"], h,
+                                                pos, c_self, L=S)
+        elif cfg.attention_variant == "performer":
+            y, c_self = A.performer_attention_decode(cfg, p["attn"], h, pos,
+                                                     c_self)
+        else:
+            y, c_self = A.full_attention_decode(cfg, p["attn"], h, pos, c_self)
+        x = x + y
+        h = rms_norm(x, p["cross_norm"]["scale"], cfg.norm_eps, plus_one=True)
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        q = (h @ p["cross_attn"]["wq"]).reshape(B, 1, cfg.num_heads, cfg.head_dim)
+        y = A._sdpa(cfg, q, ck, cv, mem_mask)
+        x = x + y.reshape(B, 1, -1) @ p["cross_attn"]["wo"]
+        h = rms_norm(x, p["mlp_norm"]["scale"], cfg.norm_eps, plus_one=True)
+        x = x + gated_mlp(p["mlp"], h, cfg.mlp_act)
+        return x, c_self
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["blocks_dec"], cache["self"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps, plus_one=True)
+    logits = x @ params["lm_head"]["kernel"]
+    new_cache = dict(cache)
+    new_cache["self"] = new_self
+    return logits, new_cache

@@ -1,0 +1,98 @@
+"""RG-LRU recurrent block (RecurrentGemma), pure JAX.
+
+Block: x -> (gate branch, recurrent branch); recurrent branch = causal
+conv1d -> RG-LRU; output = GeLU(gate) * lru_out -> out_proj.
+
+RG-LRU:  r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+         a_t = exp(-c * softplus(Lambda) * r_t)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import shard
+from repro.models.layers import dense_init
+
+_RGLRU_C = 8.0
+
+
+def lru_init(key, cfg, dtype=jnp.float32):
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * w), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (w, 4)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        # recurrence/input gates act on the conv output (w -> 2w, diagonal-ish
+        # dense as in the reference implementation)
+        "gates": dense_init(ks[2], (w, 2 * w), dtype=dtype),
+        "a_param": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[3], (w,), minval=0.9, maxval=0.999),
+                     1e-4, None))).astype(dtype),
+        "out_proj": dense_init(ks[4], (w, d), dtype=dtype),
+    }
+
+
+def _conv1d(x, w, b):
+    K = w.shape[1]
+    xpad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(xpad[:, k:k + x.shape[1], :] * w.T[k][None, None, :]
+               for k in range(K)) + b
+
+
+def _rglru_scan(x, r, i, a_param, h0=None):
+    """x/r/i: (B, L, w) fp32. Linear recurrence via associative scan."""
+    log_a = -_RGLRU_C * jax.nn.softplus(a_param)[None, None, :] * r  # (B,L,w) <= 0
+    a = jnp.exp(log_a)
+    gated = i * x
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, None)) * gated
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    acc_a, acc_b = jax.lax.associative_scan(assoc, (a, b), axis=1)
+    return acc_b, acc_b[:, -1]
+
+
+def lru_block_train(cfg, p, x):
+    B, L, _ = x.shape
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, ("batch", "seq", "inner"))
+    xin = _conv1d(xin, p["conv_w"], p["conv_b"])
+    g = xin @ p["gates"]
+    r, i = jnp.split(jax.nn.sigmoid(g.astype(jnp.float32)), 2, axis=-1)
+    h, _ = _rglru_scan(xin.astype(jnp.float32), r, i,
+                       p["a_param"].astype(jnp.float32))
+    y = h.astype(x.dtype) * jax.nn.gelu(z)
+    return y @ p["out_proj"]
+
+
+def lru_decode_init(cfg, B, dtype=jnp.float32):
+    w, K = cfg.lru_width, 4
+    return {"conv": jnp.zeros((B, K - 1, w), dtype),
+            "h": jnp.zeros((B, w), jnp.float32)}
+
+
+def lru_block_decode(cfg, p, x, cache):
+    B = x.shape[0]
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)  # (B,1,w)
+    conv_buf = jnp.concatenate([cache["conv"], xin.astype(cache["conv"].dtype)], axis=1)
+    K = p["conv_w"].shape[1]
+    xc = jnp.einsum("bkc,ck->bc", conv_buf[:, -K:], p["conv_w"]) + p["conv_b"]
+    g = xc @ p["gates"]
+    r, i = jnp.split(jax.nn.sigmoid(g.astype(jnp.float32)), 2, axis=-1)
+    log_a = -_RGLRU_C * jax.nn.softplus(p["a_param"].astype(jnp.float32))[None] * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, None)) * (
+        i * xc.astype(jnp.float32))
+    h = a * cache["h"] + b
+    y = (h.astype(x.dtype) * jax.nn.gelu(z[:, 0]))[:, None, :]
+    return y @ p["out_proj"], {"conv": conv_buf[:, 1:], "h": h}

@@ -1,0 +1,138 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b), pure JAX.
+
+Selective scan runs chunked: `lax.scan` across chunks carrying (B, d_inner, N)
+state; within a chunk an associative scan materializes at most
+(chunk, d_inner, N) — the standard memory shape for TPU/long-context.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import shard
+from repro.models.layers import dense_init
+
+
+def ssm_init(key, cfg, dtype=jnp.float32):
+    d, din, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = cfg.dt_rank or max(1, d // 16)
+    ks = jax.random.split(key, 8)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (din, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * din), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (din, cfg.ssm_conv)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": dense_init(ks[2], (din, dt_rank + 2 * N), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, din), dtype=dtype),
+        "dt_bias": jnp.asarray(
+            jnp.log(jnp.expm1(jnp.clip(
+                jax.random.uniform(ks[4], (din,), minval=1e-3, maxval=0.1),
+                1e-4, None))), dtype),
+        "A_log": jnp.log(A).astype(dtype),
+        "D": jnp.ones((din,), dtype),
+        "out_proj": dense_init(ks[5], (din, d), dtype=dtype),
+    }
+
+
+def _causal_conv1d(x, w, b):
+    """x: (B, L, C); w: (C, K) depthwise causal conv."""
+    K = w.shape[1]
+    xpad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # depthwise conv as sum of shifted scalings (K is tiny: 4);
+    # w[:, K-1] multiplies the current token (matches the decode ring buffer)
+    out = sum(xpad[:, k:k + x.shape[1], :] * w.T[k][None, None, :]
+              for k in range(K))
+    return out + b
+
+
+def selective_scan(u, dt, A, Bm, Cm, D, chunk: int = 256, h0=None):
+    """u: (B, L, din); dt: (B, L, din); A: (din, N); Bm/Cm: (B, L, N).
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t ;  y_t = C_t . h_t + D u_t.
+    Returns (y (B, L, din), h_final (B, din, N)).
+    """
+    B, L, din = u.shape
+    N = A.shape[1]
+    C = min(chunk, L)
+    assert L % C == 0
+    nC = L // C
+    dA = jnp.exp(dt[..., None] * A[None, None])  # (B, L, din, N)
+    dBu = (dt * u)[..., None] * Bm[:, :, None, :]  # (B, L, din, N)
+    dA_ = dA.reshape(B, nC, C, din, N).transpose(1, 0, 2, 3, 4)
+    dBu_ = dBu.reshape(B, nC, C, din, N).transpose(1, 0, 2, 3, 4)
+    Cm_ = Cm.reshape(B, nC, C, N).transpose(1, 0, 2, 3)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def step(h, inp):
+        da, dbu, cm = inp  # (B,C,din,N), (B,C,din,N), (B,C,N)
+        acc_a, acc_b = jax.lax.associative_scan(assoc, (da, dbu), axis=1)
+        hs = acc_a * h[:, None] + acc_b  # (B,C,din,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, cm)
+        return hs[:, -1], y
+
+    h = h0 if h0 is not None else jnp.zeros((B, din, N), jnp.float32)
+    h, ys = jax.lax.scan(step, h, (dA_.astype(jnp.float32),
+                                   dBu_.astype(jnp.float32),
+                                   Cm_.astype(jnp.float32)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, L, din)
+    return (y + u * D[None, None]).astype(u.dtype), h
+
+
+def mamba_block_train(cfg, p, x, cache=None):
+    """x: (B, L, d) -> (B, L, d). cache unused in train (returns None)."""
+    B, L, _ = x.shape
+    din = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, ("batch", "seq", "inner"))
+    xin = _causal_conv1d(xin, p["conv_w"], p["conv_b"])
+    xin = jax.nn.silu(xin)
+    dt_rank = p["dt_proj"].shape[0]
+    N = cfg.ssm_state
+    proj = xin @ p["x_proj"]  # (B, L, dt_rank + 2N)
+    dt_low, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = selective_scan(xin.astype(jnp.float32), dt.astype(jnp.float32), A,
+                          Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                          p["D"].astype(jnp.float32))
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_decode_init(cfg, B, dtype=jnp.float32):
+    din, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((B, K - 1, din), dtype),
+        "h": jnp.zeros((B, din, N), jnp.float32),
+    }
+
+
+def mamba_block_decode(cfg, p, x, cache):
+    """x: (B, 1, d); O(1) state update."""
+    B = x.shape[0]
+    N = cfg.ssm_state
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)  # (B,1,din)
+    conv_buf = jnp.concatenate([cache["conv"], xin.astype(cache["conv"].dtype)], axis=1)
+    K = cfg.ssm_conv
+    w = p["conv_w"]  # (din, K)
+    xc = jnp.einsum("bkc,ck->bc", conv_buf[:, -K:], w) + p["conv_b"]
+    xc = jax.nn.silu(xc)[:, None, :]  # (B,1,din)
+    dt_rank = p["dt_proj"].shape[0]
+    proj = xc @ p["x_proj"]
+    dt_low, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"] + p["dt_bias"])  # (B,1,din)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[..., None] * A[None, None])[:, 0]  # (B,din,N)
+    dBu = ((dt * xc)[..., None] * Bm[:, :, None, :])[:, 0]
+    h = dA.astype(jnp.float32) * cache["h"] + dBu.astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))
+    y = (y + xc[:, 0].astype(jnp.float32) * p["D"][None]).astype(x.dtype)
+    y = (y * jax.nn.silu(z[:, 0]))[:, None, :]
+    out = y @ p["out_proj"]
+    return out, {"conv": conv_buf[:, 1:], "h": h}

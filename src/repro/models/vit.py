@@ -1,0 +1,129 @@
+"""Topological Vision Transformer (paper Sec 4.4, TopViT with trees).
+
+Performer attention with the RPE mask M = [f(dist_MST(i,j))] over the
+2D-grid-graph MST of image patches, applied through Algorithm 1 with the
+IT-plan FastMult (exact). 3 learnable mask scalars per layer (synced).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.integrate import compile_plan, execute_plan
+from repro.core.masks import GS, masked_linear_attention
+from repro.graphs.graph import grid_graph
+from repro.graphs.mst import minimum_spanning_tree
+from repro.models import attention as A
+from repro.models.layers import dense_init, dtype_of, gated_mlp, gated_mlp_init, rms_norm
+
+
+def build_grid_plan(cfg):
+    """IT plan for the patch-grid MST (built once per config)."""
+    side = int(round(np.sqrt(cfg.num_prefix_embeddings)))
+    assert side * side == cfg.num_prefix_embeddings
+    g = grid_graph(side, side)
+    mst = minimum_spanning_tree(g)
+    return compile_plan(mst, leaf_size=16)
+
+
+def _vit_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "attn_norm": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+        "attn": A.attn_init(ks[0], cfg, dtype),
+        "topo": A.topo_init(ks[1], cfg, dtype),
+        "mlp_norm": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+        "mlp": gated_mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(cfg, key, num_classes: int = 1000, patch_dim: int = 768):
+    dtype = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    blocks = jax.vmap(lambda k: _vit_block_init(k, cfg, dtype))(
+        jax.random.split(ks[0], cfg.num_layers))
+    L = cfg.num_prefix_embeddings
+    return {
+        "patch_proj": {"kernel": dense_init(ks[1], (patch_dim, cfg.d_model),
+                                            dtype=dtype),
+                       "bias": jnp.zeros((cfg.d_model,), dtype)},
+        "pos_embed": (jax.random.normal(ks[2], (L, cfg.d_model)) * 0.02
+                      ).astype(dtype),
+        "blocks": blocks,
+        "final_norm": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+        "head": {"kernel": dense_init(ks[3], (cfg.d_model, num_classes),
+                                      dtype=dtype),
+                 "bias": jnp.zeros((num_classes,), dtype)},
+    }
+
+
+def _grid_fastmult(plan, fn_eval):
+    """FastMult_M via the IT plan; linear in the field, so all batch/head/
+    channel axes fold into the trailing field dim of one plan execution."""
+
+    def fastmult(X):  # X: (..., L, c)
+        shape = X.shape
+        L = shape[-2]
+        Xf = jnp.moveaxis(X.reshape(-1, L, shape[-1]), 0, -1)  # (L, c, B*)
+        Xf = Xf.reshape(L, -1)
+        out = execute_plan(plan, Xf.astype(jnp.float32), fn_eval, degree=16)
+        out = out.reshape(L, shape[-1], -1)
+        return jnp.moveaxis(out, -1, 0).reshape(shape)
+
+    return fastmult
+
+
+def topo_vit_attention(cfg, p, p_topo, x, plan):
+    B, L, _ = x.shape
+    q, k, v = A._project_qkv(cfg, p["attn"], x,
+                             jnp.zeros((B, L), jnp.int32), rope=False)
+    qf = A.phi_features(q, cfg.performer_phi)
+    kf = A.phi_features(k, cfg.performer_phi)
+    coeffs = A.topo_mask_coeffs(cfg, p_topo)[0]  # synced: same across heads
+
+    def fn_eval(z):
+        acc = jnp.zeros_like(z)
+        zs = z * cfg.topo_dist_scale
+        for t in range(coeffs.shape[0] - 1, -1, -1):
+            acc = acc * zs + coeffs[t]
+        return GS[cfg.topo_g](acc)
+
+    fastmult = _grid_fastmult(plan, fn_eval)
+    # (B,L,H,m) -> heads folded into batch for Alg. 1
+    qf_ = qf.transpose(0, 2, 1, 3)
+    kf_ = kf.transpose(0, 2, 1, 3)
+    v_ = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    out = masked_linear_attention(qf_, kf_, v_, fastmult)
+    out = out.transpose(0, 2, 1, 3).reshape(B, L, -1).astype(x.dtype)
+    return out @ p["attn"]["wo"]
+
+
+def forward(cfg, params, patches, plan):
+    """patches: (B, L, patch_dim) -> logits (B, num_classes)."""
+    x = patches.astype(dtype_of(cfg)) @ params["patch_proj"]["kernel"]
+    x = x + params["patch_proj"]["bias"] + params["pos_embed"][None]
+    B, L, _ = x.shape
+
+    def body(x, p):
+        h = rms_norm(x, p["attn_norm"]["scale"], cfg.norm_eps, plus_one=True)
+        if cfg.attention_variant == "topo":
+            x = x + topo_vit_attention(cfg, p, p["topo"], h, plan)
+        else:
+            x = x + A.performer_attention_train(
+                cfg, p["attn"], h,
+                jnp.zeros((B, L), jnp.int32), causal=False)
+        h = rms_norm(x, p["mlp_norm"]["scale"], cfg.norm_eps, plus_one=True)
+        x = x + gated_mlp(p["mlp"], h, cfg.mlp_act)
+        return x, ()
+
+    # plan arrays are numpy constants: python loop over stacked params
+    n = jax.tree.leaves(params["blocks"])[0].shape[0]
+    for i in range(n):
+        layer = jax.tree.map(lambda a: a[i], params["blocks"])
+        x, _ = body(x, layer)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps, plus_one=True)
+    pooled = jnp.mean(x, axis=1)
+    return pooled @ params["head"]["kernel"] + params["head"]["bias"]

@@ -1,0 +1,1 @@
+from repro.train.loop import TrainLoopConfig, run_training  # noqa: F401

@@ -1,0 +1,154 @@
+"""Fault-tolerant training loop.
+
+Production posture (1000+ nodes; DESIGN §6):
+  - deterministic host-sharded data keyed by global step -> restart resumes
+    bit-identically (asserted by tests/test_fault_tolerance.py);
+  - atomic checkpoints every `ckpt_every` steps, keep-k, auto-resume;
+  - straggler watchdog: EMA step time, outliers logged (on real fleets this
+    feeds the health controller that drains the slow host);
+  - optional int8 error-feedback gradient compression around the DP
+    all-reduce (optim.compress);
+  - microbatching (gradient accumulation) via lax.scan inside the step;
+  - crash injection hook (`fail_at_step`) for the restart test.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.synthetic import SyntheticLMStream
+from repro.models import api
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compress import CompressorState, compress_grads, compressor_init
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    batch_size: int = 8
+    seq_len: int = 128
+    microbatches: int = 1
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    seed: int = 0
+    log_every: int = 10
+    fail_at_step: int | None = None  # crash injection (tests)
+    compress_grads: bool = False
+    straggler_factor: float = 2.0
+
+
+class StragglerWatchdog:
+    def __init__(self, factor: float = 2.0, warmup: int = 5):
+        self.ema = None
+        self.factor = factor
+        self.warmup = warmup
+        self.count = 0
+        self.events: list[tuple[int, float, float]] = []
+
+    def observe(self, step: int, dt: float):
+        self.count += 1
+        if self.ema is None:
+            self.ema = dt
+            return False
+        is_slow = (self.count > self.warmup) and dt > self.factor * self.ema
+        if is_slow:
+            self.events.append((step, dt, self.ema))
+        # slow steps should not poison the baseline
+        alpha = 0.1 if not is_slow else 0.01
+        self.ema = (1 - alpha) * self.ema + alpha * dt
+        return is_slow
+
+
+def make_accumulating_step(cfg, opt_cfg: AdamWConfig, microbatches: int,
+                           use_compression: bool):
+    """train_step with gradient accumulation over the leading microbatch dim."""
+
+    def step(params, opt_state, comp_state, batch):
+        def lf(p, mb):
+            loss, _ = api.loss_fn(cfg, p, mb)
+            return loss
+
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(lf)(params, batch)
+        else:
+            def acc(carry, mb):
+                l, g = jax.value_and_grad(lf)(params, mb)
+                return None, (l, g)
+
+            _, (losses, grads) = jax.lax.scan(acc, None, batch)
+            loss = jnp.mean(losses)
+            grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+        if use_compression:
+            grads, comp_state = compress_grads(grads, comp_state)
+        params, opt_state, metrics = adamw_update(grads, opt_state, params,
+                                                  opt_cfg)
+        return params, opt_state, comp_state, dict(metrics, loss=loss)
+
+    return step
+
+
+def run_training(model_cfg, loop_cfg: TrainLoopConfig,
+                 opt_cfg: AdamWConfig | None = None, verbose: bool = True):
+    """Returns dict with final params, per-step losses, watchdog events."""
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=loop_cfg.steps, warmup_steps=max(
+        1, loop_cfg.steps // 20))
+    key = jax.random.PRNGKey(loop_cfg.seed)
+    params = api.init_params(model_cfg, key)
+    opt_state = adamw_init(params)
+    comp_state = (compressor_init(params) if loop_cfg.compress_grads else None)
+
+    mgr = CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.keep)
+    start_step = 0
+    restored = mgr.restore(params, opt_state)
+    if restored is not None:
+        params = restored["params"]
+        if "opt" in restored:
+            opt_state = restored["opt"]
+        start_step = restored["step"]
+        if verbose:
+            print(f"[resume] restored checkpoint at step {start_step}")
+
+    stream = SyntheticLMStream(
+        model_cfg.vocab_size, loop_cfg.batch_size, loop_cfg.seq_len,
+        seed=loop_cfg.seed,
+        vlm_prefix=(model_cfg.num_prefix_embeddings
+                    if model_cfg.family == "vlm" else 0),
+        encdec_src=(model_cfg.max_source_len if model_cfg.is_encdec else 0))
+
+    step_fn = jax.jit(make_accumulating_step(
+        model_cfg, opt_cfg, loop_cfg.microbatches,
+        loop_cfg.compress_grads), donate_argnums=(0, 1, 2))
+
+    watchdog = StragglerWatchdog(loop_cfg.straggler_factor)
+    losses = []
+    for step in range(start_step, loop_cfg.steps):
+        if loop_cfg.fail_at_step is not None and step == loop_cfg.fail_at_step:
+            raise RuntimeError(f"injected failure at step {step}")
+        batch = stream.batch_at(step)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if loop_cfg.microbatches > 1:
+            batch = jax.tree.map(
+                lambda a: a.reshape((loop_cfg.microbatches,
+                                     a.shape[0] // loop_cfg.microbatches)
+                                    + a.shape[1:]), batch)
+        t0 = time.time()
+        params, opt_state, comp_state, metrics = step_fn(
+            params, opt_state, comp_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        slow = watchdog.observe(step, dt)
+        losses.append(loss)
+        if verbose and (step % loop_cfg.log_every == 0 or slow):
+            tag = " [STRAGGLER]" if slow else ""
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"({dt*1e3:.0f} ms){tag}", flush=True)
+        if (step + 1) % loop_cfg.ckpt_every == 0 or step + 1 == loop_cfg.steps:
+            mgr.save(step + 1, params, opt_state)
+    return {"params": params, "losses": np.array(losses),
+            "straggler_events": watchdog.events, "final_step": loop_cfg.steps}

@@ -1,0 +1,109 @@
+"""Topological masking: Algorithm 1, Toeplitz fastmult, cordial decode."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks as MK
+from repro.core.toeplitz import (causal_toeplitz_matvec,
+                                 symmetric_toeplitz_matvec, toeplitz_dense)
+
+
+@settings(max_examples=15, deadline=None)
+@given(L=st.integers(4, 96), d=st.integers(1, 5), seed=st.integers(0, 10**6),
+       causal=st.booleans())
+def test_toeplitz_fastmult_property(L, d, seed, causal):
+    r = np.random.default_rng(seed)
+    F = jnp.asarray(r.normal(size=L), jnp.float32)
+    V = jnp.asarray(r.normal(size=(L, d)), jnp.float32)
+    M = toeplitz_dense(F, L, causal=causal)
+    ref = M @ V
+    got = (causal_toeplitz_matvec if causal else symmetric_toeplitz_matvec)(F, V)
+    assert float(jnp.max(jnp.abs(got - ref))) < 1e-4 * max(
+        1.0, float(jnp.max(jnp.abs(ref))))
+
+
+@pytest.mark.parametrize("g,coeffs", [("exp", [0.1, -0.4]),
+                                      ("exp", [0.0, -0.2, -0.1]),
+                                      ("identity", [1.0, 0.3, 0.05]),
+                                      ("recip", [0.0, 1.0])])
+def test_algorithm1_vs_bruteforce(g, coeffs, rng):
+    L, d, m = 64, 8, 6
+    qf = jnp.asarray(np.abs(rng.normal(size=(2, L, m))), jnp.float32)
+    kf = jnp.asarray(np.abs(rng.normal(size=(2, L, m))), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(2, L, d)), jnp.float32)
+    cs = jnp.asarray(coeffs, jnp.float32)
+    fm = MK.make_sequence_fastmult(g, cs, L, causal=True, dist_scale=1 / L)
+    got = MK.masked_linear_attention(qf, kf, V, fm)
+    Fv = MK.sequence_mask_values(g, cs, L, 1 / L)
+    mask = toeplitz_dense(Fv, L, causal=True)
+    ref = MK.masked_attention_bruteforce(qf, kf, V, mask)
+    assert float(jnp.max(jnp.abs(got - ref))) < 1e-4
+
+
+@pytest.mark.parametrize("g,coeffs", [("exp", [0.1, -0.4]),
+                                      ("identity", [1.0, 0.3, 0.05])])
+def test_cordial_decode_equals_prefill(g, coeffs, rng):
+    L, d, m = 48, 4, 6
+    qf = jnp.asarray(np.abs(rng.normal(size=(2, L, m))), jnp.float32)
+    kf = jnp.asarray(np.abs(rng.normal(size=(2, L, m))), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(2, L, d)), jnp.float32)
+    cs = np.asarray(coeffs, np.float32)
+    Fv = MK.sequence_mask_values(g, jnp.asarray(cs), L, 1 / L)
+    ref = MK.masked_attention_bruteforce(qf, kf, V,
+                                         toeplitz_dense(Fv, L, causal=True))
+    dec = MK.cordial_decomposition(g, cs, dist_scale=1 / L)
+    state = MK.decode_state_init(dec, m, d, batch_shape=(2,))
+    outs = []
+    for t in range(L):
+        state = MK.decode_state_update(dec, state, t, kf[:, t], V[:, t])
+        outs.append(MK.decode_state_read(dec, state, t, qf[:, t]))
+    got = jnp.stack(outs, axis=1)
+    assert float(jnp.max(jnp.abs(got - ref))) < 2e-4
+
+
+def test_chebyshev_separable_decode(rng):
+    """Non-separable mask (g=exp, degree 2): the Chebyshev rank-R expansion
+    decodes streaming with spectral accuracy (beyond-paper, DESIGN §3)."""
+    from repro.configs.base import get_smoke_config
+    from repro.models import attention as A
+
+    cfg = get_smoke_config("llama3_2_1b").replace(
+        dtype="float32", attention_variant="topo", topo_degree=2,
+        topo_dist_scale=1.0 / 48, topo_synced=True)
+    coeffs = jnp.asarray(np.array([[0.1, -1.2, -0.7]] * cfg.num_heads),
+                         jnp.float32)
+    L = 48
+    alpha, beta, R = A.topo_decomposition(cfg, coeffs, L, rank=24)
+    # reconstruct f(i-j) from the decomposition and compare
+    from repro.core.masks import GS
+    ii = np.arange(L, dtype=np.float32)
+    errs = []
+    for i in range(0, L, 7):
+        for j in range(0, i + 1, 5):
+            a = alpha(jnp.asarray(float(i)))
+            b = beta(jnp.asarray(float(j)))
+            approx_v = float(jnp.sum(a[0] * b[0]))
+            z = (i - j) * cfg.topo_dist_scale
+            exact = float(np.exp(0.1 - 1.2 * z - 0.7 * z * z))
+            errs.append(abs(approx_v - exact) / max(abs(exact), 1e-9))
+    assert max(errs) < 1e-4
+
+
+def test_grid_mask_plan_fastmult(rng):
+    """ViT grid masks through the IT plan == dense mask multiply."""
+    from repro.core.integrate import compile_plan, execute_plan
+    from repro.graphs.graph import grid_graph
+    from repro.graphs.mst import minimum_spanning_tree
+    from repro.graphs.traverse import tree_all_pairs
+
+    g = grid_graph(6, 6)
+    mst = minimum_spanning_tree(g)
+    plan = compile_plan(mst, leaf_size=8)
+    D = tree_all_pairs(mst)
+    f = lambda z: jnp.exp(-0.3 * z)
+    X = jnp.asarray(rng.normal(size=(36, 5)), jnp.float32)
+    ref = np.exp(-0.3 * D) @ np.asarray(X)
+    got = np.asarray(execute_plan(plan, X, f, degree=16))
+    assert np.max(np.abs(got - ref)) / np.max(np.abs(ref)) < 1e-5

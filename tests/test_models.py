@@ -1,0 +1,194 @@
+"""Per-arch smoke tests (reduced configs): forward + one train step on CPU,
+shape and finiteness assertions; decode-path consistency checks."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCHS, get_smoke_config
+from repro.models import api
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+SMOKE_ARCHS = [a for a in ARCHS if a != "topovit_b16"]
+
+
+def _batch(cfg, rng, B=2, L=32):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, L)),
+                                   jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_prefix_embeddings, 1024)), jnp.float32)
+    if cfg.is_encdec:
+        batch["src_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.max_source_len, 1024)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", SMOKE_ARCHS)
+def test_smoke_forward_and_train_step(arch, rng):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+    loss, metrics = api.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    # one optimizer step moves the loss
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=10,
+                       weight_decay=0.0)
+    grads = jax.grad(lambda p: api.loss_fn(cfg, p, batch)[0])(params)
+    params2, opt, m = adamw_update(grads, opt, params, ocfg)
+    assert float(m["grad_norm"]) > 0
+    loss2, _ = api.loss_fn(cfg, params2, batch)
+    assert np.isfinite(float(loss2))
+    assert float(loss2) < float(loss)
+
+
+@pytest.mark.parametrize("arch", SMOKE_ARCHS)
+def test_smoke_decode(arch, rng):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    S, B = 40, 2
+    cache = api.init_cache(cfg, B, S)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+    for pos in range(3):
+        logits, cache = api.decode_fn(cfg, params, cache, tok,
+                                      jnp.asarray(pos, jnp.int32), S)
+    assert logits.shape == (B, 1, cfg.padded_vocab())
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("variant", ["performer", "topo"])
+def test_attention_variants(variant, rng):
+    cfg = get_smoke_config("llama3_2_1b").replace(
+        dtype="float32", attention_variant=variant, topo_dist_scale=1.0 / 40)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+    loss, _ = api.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ["falcon_mamba_7b", "recurrentgemma_2b",
+                                  "qwen2_1_5b"])
+def test_decode_matches_prefill_logits(arch, rng):
+    """Streaming decode over a prompt == teacher-forced forward logits."""
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    params = api.init_params(cfg, jax.random.PRNGKey(1))
+    B, L = 1, 12
+    toks = rng.integers(0, cfg.vocab_size, (B, L)).astype(np.int32)
+    # full forward logits at last position
+    from repro.models import lm
+    full_logits = lm.forward_prefill(cfg, params, {"tokens": jnp.asarray(toks)})
+    # streaming decode
+    cache = api.init_cache(cfg, B, L + 4)
+    for pos in range(L):
+        logits, cache = api.decode_fn(cfg, params, cache,
+                                      jnp.asarray(toks[:, pos:pos + 1]),
+                                      jnp.asarray(pos, jnp.int32), L + 4)
+    diff = float(jnp.max(jnp.abs(logits - full_logits)))
+    scale = float(jnp.max(jnp.abs(full_logits))) + 1e-6
+    assert diff / scale < 5e-3, f"decode/prefill mismatch: {diff/scale}"
+
+
+def test_topo_decode_matches_prefill(rng):
+    """The paper-variant decode (cordial states) == its prefill logits."""
+    cfg = get_smoke_config("llama3_2_1b").replace(
+        dtype="float32", attention_variant="topo", topo_degree=1,
+        topo_dist_scale=1.0 / 16)
+    params = api.init_params(cfg, jax.random.PRNGKey(2))
+    B, L = 1, 12
+    toks = rng.integers(0, cfg.vocab_size, (B, L)).astype(np.int32)
+    from repro.models import lm
+    full_logits = lm.forward_prefill(cfg, params, {"tokens": jnp.asarray(toks)})
+    cache = api.init_cache(cfg, B, L)
+    for pos in range(L):
+        logits, cache = api.decode_fn(cfg, params, cache,
+                                      jnp.asarray(toks[:, pos:pos + 1]),
+                                      jnp.asarray(pos, jnp.int32), L)
+    diff = float(jnp.max(jnp.abs(logits - full_logits)))
+    scale = float(jnp.max(jnp.abs(full_logits))) + 1e-6
+    assert diff / scale < 5e-3
+
+
+def test_moe_dispatch_matches_dense_experts(rng):
+    """Sort-based capacity dispatch == explicit per-token expert compute
+    (with capacity large enough that nothing drops)."""
+    from repro.models.moe import moe_block, moe_init
+
+    cfg = get_smoke_config("deepseek_v2_lite_16b").replace(
+        dtype="float32", capacity_factor=8.0)
+    key = jax.random.PRNGKey(3)
+    p = moe_init(key, cfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 8, cfg.d_model)), jnp.float32)
+    out, aux = moe_block(cfg, p, x)
+    # dense reference: route every token through its top-k experts explicitly
+    xt = np.asarray(x).reshape(-1, cfg.d_model)
+    logits = xt @ np.asarray(p["router"])
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    order = np.argsort(-probs, axis=-1)[:, :cfg.top_k]
+
+    def expert(e, xv):
+        a = xv @ p["experts_w_gate"][e]
+        b = xv @ p["experts_w_in"][e]
+        return (jax.nn.silu(a) * b) @ p["experts_w_out"][e]
+
+    ref = np.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        g = probs[t, order[t]]
+        g = g / g.sum()
+        for kk, e in enumerate(order[t]):
+            ref[t] += g[kk] * np.asarray(expert(int(e), jnp.asarray(xt[t])))
+        a = xt[t] @ np.asarray(p["shared_w_gate"])
+        b = xt[t] @ np.asarray(p["shared_w_in"])
+        ref[t] += np.asarray((jax.nn.silu(jnp.asarray(a)) * b)
+                             @ p["shared_w_out"])
+    got = np.asarray(out).reshape(-1, cfg.d_model)
+    assert np.max(np.abs(got - ref)) < 1e-3
+
+
+def test_mla_decode_matches_train_attention(rng):
+    """Absorbed-matmul MLA decode == the naive train-path attention."""
+    cfg = get_smoke_config("deepseek_v3_671b").replace(dtype="float32")
+    from repro.models import attention as A
+
+    p = A.mla_init(jax.random.PRNGKey(4), cfg, jnp.float32)
+    B, L = 1, 10
+    x = jnp.asarray(rng.normal(size=(B, L, cfg.d_model)) * 0.1, jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+    ref = A.mla_attention_train(cfg, p, x, positions, causal=True)
+    cache = {"ckv": jnp.zeros((B, L, cfg.kv_lora_rank), jnp.float32),
+             "krope": jnp.zeros((B, L, cfg.qk_rope_dim), jnp.float32)}
+    outs = []
+    for pos in range(L):
+        y, cache = A.mla_attention_decode(cfg, p, x[:, pos:pos + 1],
+                                          jnp.asarray(pos, jnp.int32), cache)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    assert float(jnp.max(jnp.abs(got - ref))) < 1e-4
+
+
+def test_param_counts_full_configs():
+    """Full configs match their nameplate sizes (within tolerance)."""
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.roofline.analysis import count_params
+
+    expected = {
+        "falcon_mamba_7b": (7.3e9, 0.15),
+        "llama3_2_1b": (1.3e9, 0.2),
+        "qwen2_1_5b": (1.6e9, 0.25),
+        "gemma_7b": (8.5e9, 0.15),
+        # the assignment specifies "llama-arch" (gated 3-matrix MLP) with
+        # these dims -> 47B; the real granite-34b-code is gpt-bigcode with a
+        # 2-matrix MLP at 34B. We follow the assignment's arch directive.
+        "granite_34b": (47e9, 0.15),
+        "llava_next_34b": (34e9, 0.15),
+        "deepseek_v2_lite_16b": (16e9, 0.2),
+        "deepseek_v3_671b": (671e9, 0.15),
+    }
+    for arch, (target, tol) in expected.items():
+        total, active = count_params(get_config(arch))
+        assert abs(total - target) / target < tol, (
+            f"{arch}: {total/1e9:.2f}B vs nameplate {target/1e9:.0f}B")
+        assert active <= total
