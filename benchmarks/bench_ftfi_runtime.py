@@ -1,18 +1,31 @@
-"""Paper Fig. 3: FTFI vs BTFI runtime (preprocessing + integration) as a
-function of N, on synthetic path+random-edge graphs and mesh graphs."""
+"""Paper Fig. 3 / Sec 5: BTFI vs FTFI runtime (preprocessing + integration)
+as a function of N, on synthetic path+random-edge graphs and mesh graphs —
+now with a --backend axis so the BTFI-vs-host-vs-plan-vs-pallas speedup is
+reproducible from one command:
+
+  PYTHONPATH=src python benchmarks/bench_ftfi_runtime.py \
+      --backend host,plan,pallas --sizes 1000,4000
+"""
 from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
 
 import numpy as np
 
+if __package__ in (None, ""):  # `python benchmarks/bench_ftfi_runtime.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
 from benchmarks.common import emit, timeit
-from repro.core import Exponential, FTFI, Polynomial, Rational
-from repro.core.integrate import BTFI
+from repro.core import BTFI, Exponential, Integrator
 from repro.graphs.graph import synthetic_graph
 from repro.graphs.meshes import icosphere, mesh_graph
 from repro.graphs.mst import minimum_spanning_tree
 
 
-def run(sizes=(1000, 4000, 10000), mesh_subdiv=(3, 4), repeat=2):
+def run(sizes=(1000, 4000, 10000), mesh_subdiv=(3, 4), repeat=2,
+        backends=("host",), leaf_size=256):
     rng = np.random.default_rng(0)
     fn = Exponential(-0.5)
     rows = []
@@ -26,28 +39,58 @@ def run(sizes=(1000, 4000, 10000), mesh_subdiv=(3, 4), repeat=2):
     for name, n, mk in cases:
         tree = mk()
         X = rng.normal(size=(tree.num_vertices, 4))
-        t_pre_ftfi = timeit(lambda: FTFI(tree, leaf_size=256), repeat=1,
-                            warmup=0)
-        ftfi = FTFI(tree, leaf_size=256)
-        t_int_ftfi = timeit(lambda: ftfi.integrate(fn, X), repeat=repeat)
         t_pre_btfi = timeit(lambda: BTFI(tree, dtype=np.float32), repeat=1,
                             warmup=0)
         btfi = BTFI(tree, dtype=np.float32)
         t_int_btfi = timeit(lambda: btfi.integrate(fn, X), repeat=repeat)
-        # exactness guard: same result
-        err = np.max(np.abs(ftfi.integrate(fn, X) - btfi.integrate(fn, X))
-                     ) / max(np.max(np.abs(btfi.integrate(fn, X))), 1e-9)
-        total_f = t_pre_ftfi + t_int_ftfi
-        total_b = t_pre_btfi + t_int_btfi
-        emit(f"fig3/{name}/n{n}/ftfi_pre", t_pre_ftfi)
-        emit(f"fig3/{name}/n{n}/ftfi_int", t_int_ftfi)
+        ref = btfi.integrate(fn, X)
         emit(f"fig3/{name}/n{n}/btfi_pre", t_pre_btfi)
-        emit(f"fig3/{name}/n{n}/btfi_int", t_int_btfi,
-             f"speedup_total={total_b/total_f:.2f}x "
-             f"speedup_int={t_int_btfi/t_int_ftfi:.2f}x relerr={err:.1e}")
-        rows.append((name, n, total_b / total_f))
+        emit(f"fig3/{name}/n{n}/btfi_int", t_int_btfi)
+        for backend in backends:
+            # fig3 measures the paper's FTFI algorithm: disable the host
+            # backend's ExpMP fast path so exp f doesn't bypass the IT walk
+            opts = {"use_expmp": False} if backend == "host" else {}
+            mk_integ = lambda: Integrator(tree, backend=backend,
+                                          leaf_size=leaf_size, **opts)
+            t_pre = timeit(mk_integ, repeat=1, warmup=0)
+            integ = mk_integ()
+            engine = integ.describe(fn)["cross_engine"]
+            run_once = lambda: np.asarray(integ.integrate(fn, X))
+            t_int = timeit(run_once, repeat=repeat)
+            got = run_once()
+            err = (np.max(np.abs(got - ref))
+                   / max(np.max(np.abs(ref)), 1e-9))
+            total_f = t_pre + t_int
+            total_b = t_pre_btfi + t_int_btfi
+            emit(f"fig3/{name}/n{n}/{backend}_pre", t_pre)
+            emit(f"fig3/{name}/n{n}/{backend}_int", t_int,
+                 f"speedup_total={total_b/total_f:.2f}x "
+                 f"speedup_int={t_int_btfi/t_int:.2f}x relerr={err:.1e} "
+                 f"engine={engine}")
+            rows.append({
+                "case": name, "n": n, "backend": backend, "engine": engine,
+                "pre_s": t_pre, "int_s": t_int,
+                "btfi_pre_s": t_pre_btfi, "btfi_int_s": t_int_btfi,
+                "speedup_total": total_b / total_f,
+                "speedup_int": t_int_btfi / t_int, "rel_err": float(err),
+            })
     return rows
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="host",
+                    help="comma list of host,plan,pallas")
+    ap.add_argument("--sizes", default="1000,4000")
+    ap.add_argument("--mesh-subdiv", default="3")
+    ap.add_argument("--repeat", type=int, default=2)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(sizes=tuple(int(s) for s in args.sizes.split(",") if s),
+        mesh_subdiv=tuple(int(s) for s in args.mesh_subdiv.split(",") if s),
+        repeat=args.repeat,
+        backends=tuple(args.backend.split(",")))
+
+
 if __name__ == "__main__":
-    run()
+    main()

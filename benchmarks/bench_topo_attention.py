@@ -8,12 +8,20 @@ over the unmasked Performer on a controlled task — see also
 examples/train_topological_lm.py for the end-to-end version.)"""
 from __future__ import annotations
 
+import argparse
+import pathlib
+import sys
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+if __package__ in (None, ""):  # `python benchmarks/bench_topo_attention.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
 from benchmarks.common import emit, timeit
 from repro.core import masks as MK
+from repro.core.engines import Integrator
 from repro.core.toeplitz import toeplitz_dense
 
 
@@ -57,11 +65,50 @@ def scaling(rng):
             emit(f"tab1/latency/L{L}/alg1_fft", t_fast, "brute=OOM-skip")
 
 
-def run():
+def tree_attention(rng, backends=("plan",), side=8):
+    """Grid-MST topological masking (the ViT path) per Integrator backend:
+    exactness vs the dense mask and per-call latency of Algorithm 1."""
+    from repro.graphs.graph import grid_graph
+    from repro.graphs.mst import minimum_spanning_tree
+    from repro.graphs.traverse import tree_all_pairs
+
+    L, d, m = side * side, 16, 8
+    g, coeffs = "exp", jnp.asarray([0.0, -0.25, -0.05], jnp.float32)
+    mst = minimum_spanning_tree(grid_graph(side, side))
+    D = tree_all_pairs(mst)
+    qf = jnp.asarray(np.abs(rng.normal(size=(2, L, m))), jnp.float32)
+    kf = jnp.asarray(np.abs(rng.normal(size=(2, L, m))), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(2, L, d)), jnp.float32)
+    mask = MK.mask_f(g, coeffs, 1.0 / L)(jnp.asarray(D))
+    ref = MK.masked_attention_bruteforce(qf, kf, V, mask)
+    for backend in backends:
+        integ = Integrator(mst, backend=backend, leaf_size=16)
+        fm = MK.make_tree_fastmult(integ, g, coeffs, 1.0 / L)
+        attn = lambda: jax.block_until_ready(
+            MK.masked_linear_attention(qf, kf, V, fm))
+        got = attn()
+        err = float(jnp.max(jnp.abs(got - ref)))
+        t = timeit(attn)
+        engine = integ.describe(MK.mask_f(g, coeffs, 1.0 / L))["cross_engine"]
+        emit(f"tab1/tree/L{L}/{backend}", t,
+             f"maxerr={err:.2e} engine={engine}")
+
+
+def run(backends=("plan",)):
     rng = np.random.default_rng(0)
     exactness(rng)
     scaling(rng)
+    tree_attention(rng, backends=backends)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="plan",
+                    help="comma list of plan,pallas (tree-mask section)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(backends=tuple(args.backend.split(",")))
 
 
 if __name__ == "__main__":
-    run()
+    main()

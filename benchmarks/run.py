@@ -1,9 +1,12 @@
 """Benchmark harness: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV lines.
+Prints ``name,us_per_call,derived`` CSV lines; the fig3 suite additionally
+writes BENCH_ftfi_runtime.json so the perf trajectory accumulates across PRs.
 
   python -m benchmarks.run [--quick] [--only fig3,fig4,...]
+          [--backend host,plan,pallas]
 """
 import argparse
+import json
 import sys
 import traceback
 
@@ -13,7 +16,10 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes for CI-speed runs")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--backend", default="host",
+                    help="comma list of Integrator backends for fig3/tab1")
     args = ap.parse_args()
+    backends = tuple(args.backend.split(","))
 
     from benchmarks import (bench_ftfi_runtime, bench_graph_classification,
                             bench_gw, bench_learnable_f,
@@ -23,12 +29,14 @@ def main() -> None:
     suites = {
         "fig3": lambda: bench_ftfi_runtime.run(
             sizes=(1000, 4000) if args.quick else (1000, 4000, 10000, 20000),
-            mesh_subdiv=(3,) if args.quick else (3, 4)),
+            mesh_subdiv=(3,) if args.quick else (3, 4),
+            backends=backends),
         "fig4": lambda: bench_mesh_interpolation.run(),
         "fig5": lambda: bench_graph_classification.run(
             n_per_class=15 if args.quick else 30),
         "fig6": lambda: bench_learnable_f.run(steps=150 if args.quick else 300),
-        "tab1": lambda: bench_topo_attention.run(),
+        "tab1": lambda: bench_topo_attention.run(
+            backends=tuple(b for b in backends if b != "host") or ("plan",)),
         "fig10": lambda: bench_gw.run(n=800 if args.quick else 5000),
         "roofline": lambda: bench_roofline.run(),
     }
@@ -39,7 +47,10 @@ def main() -> None:
         if name not in only:
             continue
         try:
-            fn()
+            result = fn()
+            if name == "fig3":
+                with open("BENCH_ftfi_runtime.json", "w") as fh:
+                    json.dump({"suite": "fig3", "rows": result}, fh, indent=1)
         except Exception:
             traceback.print_exc()
             failed.append(name)

@@ -6,7 +6,7 @@ import time
 
 import numpy as np
 
-from repro.core import BTFI, FTFI, Exponential, Polynomial, Rational
+from repro.core import BTFI, Exponential, Integrator, Polynomial, Rational
 from repro.graphs.graph import synthetic_graph
 from repro.graphs.mst import minimum_spanning_tree
 
@@ -21,18 +21,23 @@ rng = np.random.default_rng(0)
 X = rng.normal(size=(n, 8))
 
 # 3. Preprocess once (IntegratorTree, O(N log N)), integrate many times.
+#    One API, swappable structured-multiply backends:
+#      host   recursive numpy engines (exact; ExpMP fast path for exp)
+#      plan   jit-able bucketed plan executor (exact LDR + Chebyshev)
+#      pallas plan executor on the fused fdist_matvec TPU kernel
 t0 = time.perf_counter()
-ftfi = FTFI(tree, leaf_size=256)
+integ = Integrator(tree, backend="host", leaf_size=256)
 t_pre = time.perf_counter() - t0
 
 for fn, name in [(Exponential(-0.5), "exp(-0.5 x)"),
                  (Polynomial((1.0, -0.3, 0.02)), "1 - 0.3x + 0.02x^2"),
                  (Rational((1.0,), (1.0, 0.0, 2.0)), "1/(1+2x^2)")]:
     t0 = time.perf_counter()
-    out = ftfi.integrate(fn, X)
+    out = integ.integrate(fn, X)
     t_fast = time.perf_counter() - t0
+    engine = integ.describe(fn)["cross_engine"]
     print(f"f = {name:20s} integrated {n} vertices x 8 channels "
-          f"in {t_fast*1e3:7.1f} ms")
+          f"in {t_fast*1e3:7.1f} ms  [{engine}]")
 
 # 4. Exactness: identical to brute force (materialized N x N kernel).
 t0 = time.perf_counter()
@@ -42,8 +47,22 @@ fn = Exponential(-0.5)
 t0 = time.perf_counter()
 ref = btfi.integrate(fn, X)
 t_brute = time.perf_counter() - t0
-got = ftfi.integrate(fn, X)
+got = integ.integrate(fn, X)
 err = np.max(np.abs(got - ref)) / np.max(np.abs(ref))
 print(f"\nexact vs brute force: rel err = {err:.2e}")
-print(f"preprocessing: FTFI {t_pre:.2f}s vs BTFI {t_pre_b:.2f}s "
-      f"({t_pre_b/t_pre:.1f}x)")
+print(f"preprocessing: Integrator {t_pre:.2f}s vs BTFI {t_pre_b:.2f}s "
+      f"({t_pre_b/max(t_pre, 1e-9):.1f}x)")
+
+# 5. The jit-able backends agree too (compiled once, reused per field).
+sub_n = 1500
+sub = minimum_spanning_tree(synthetic_graph(sub_n, sub_n // 2, seed=1))
+Xs = rng.normal(size=(sub_n, 8))
+ref = BTFI(sub).integrate(fn, Xs)
+for backend in ("plan", "pallas"):
+    ii = Integrator(sub, backend=backend, leaf_size=64)
+    t0 = time.perf_counter()
+    got = np.asarray(ii.integrate(fn, Xs))
+    dt = time.perf_counter() - t0
+    err = np.max(np.abs(got - ref)) / np.max(np.abs(ref))
+    print(f"backend={backend:6s} rel err vs BTFI = {err:.2e}  "
+          f"({dt*1e3:.1f} ms, engine={ii.describe(fn)['cross_engine']})")

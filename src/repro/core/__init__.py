@@ -4,8 +4,11 @@ from repro.core.cordial import (  # noqa: F401
     Polynomial, Rational, Trigonometric,
 )
 from repro.core.integrate import (  # noqa: F401
-    BTFI, FTFI, IntegrationPlan, compile_plan, execute_plan,
-    chebyshev_batched_matvec, polynomial_batched_matvec,
+    BTFI, ExpMP, FTFI, IntegrationPlan, compile_plan,
+)
+from repro.core.engines import (  # noqa: F401
+    Integrator, available_backends, chebyshev_batched_matvec, execute_plan,
+    polynomial_batched_matvec, register_backend,
 )
 from repro.core.integrator_tree import build_integrator_tree, it_stats  # noqa: F401
 from repro.core.toeplitz import (  # noqa: F401

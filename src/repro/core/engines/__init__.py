@@ -1,0 +1,21 @@
+"""Pluggable integration backends behind one `Integrator` API.
+
+    graphs -> IntegratorTree -> IntegrationPlan -> engines -> kernels
+
+Backends (see each module's docstring for the engine matrix):
+  host    recursive numpy FTFI + ExpMP       exact, thread-safe, no jax
+  plan    bucketed jit-able plan executor    exact LDR engines + Chebyshev
+  pallas  plan executor on fdist_matvec      fused TPU kernel for poly/exp/
+                                             expq/rational, Hankel on grids
+"""
+from repro.core.engines.base import (  # noqa: F401
+    Integrator, available_backends, get_backend, register_backend,
+)
+from repro.core.engines.spec import FamilySpec, spec_of  # noqa: F401
+from repro.core.engines.plan import (  # noqa: F401
+    PlanBackend, chebyshev_batched_matvec, execute_plan,
+    exponential_batched_matvec, hankel_batched_matvec,
+    polynomial_batched_matvec,
+)
+from repro.core.engines.host import HostBackend  # noqa: F401
+from repro.core.engines.pallas import PallasBackend  # noqa: F401

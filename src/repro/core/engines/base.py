@@ -1,0 +1,75 @@
+"""Backend registry + the `Integrator` entry point.
+
+Every integration backend registers itself under a short name and implements:
+
+    __init__(tree, leaf_size=..., seed=..., **opts)
+    integrate(fn, X) -> out          # fn: CordialFn or traceable callable
+    fastmult(fn) -> Callable[X, out] # jit-able where the backend allows
+    describe(fn) -> dict             # chosen cross engine etc. (introspection)
+    grid_h -> float | None           # common distance grid, if any
+
+`Integrator(tree, backend="plan").integrate(fn, X)` is the one public API;
+later PRs (sharded plans, batched multi-tree serving, GPU backends) plug in
+as additional registered backends.
+"""
+from __future__ import annotations
+
+from typing import Callable, Type
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_backend(name: str) -> Callable[[type], type]:
+    def deco(cls: type) -> type:
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_backend(name: str) -> Type:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+class Integrator:
+    """Unified tree-field integrator with swappable structured-multiply
+    backends.
+
+    >>> integ = Integrator(tree, backend="pallas")
+    >>> out = integ.integrate(Exponential(-0.5), X)   # == BTFI, fast
+    >>> fm = integ.fastmult(fn_eval)                  # jit-able X -> M_f X
+    """
+
+    def __init__(self, tree, backend: str = "plan", *, leaf_size: int = 64,
+                 seed: int = 0, **opts):
+        self.backend = backend
+        self._impl = get_backend(backend)(tree, leaf_size=leaf_size,
+                                          seed=seed, **opts)
+
+    @property
+    def grid_h(self):
+        """Common grid spacing of all IT distances (None if not grid-aligned).
+        Grid-weight trees (e.g. unit-weight MSTs) auto-select the exact
+        Hankel/FFT cross engine for otherwise-unstructured f."""
+        return self._impl.grid_h
+
+    def integrate(self, fn, X):
+        return self._impl.integrate(fn, X)
+
+    def fastmult(self, fn) -> Callable:
+        return self._impl.fastmult(fn)
+
+    def describe(self, fn) -> dict:
+        return self._impl.describe(fn)
+
+    def __repr__(self):
+        return f"Integrator(backend={self.backend!r}, grid_h={self.grid_h})"

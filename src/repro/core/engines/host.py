@@ -1,0 +1,64 @@
+"""`host` backend: the recursive numpy FTFI (exact per-node LDR engines).
+
+Per-node structured multiplies come from each CordialFn's own `matvec`
+strategy (see core.cordial's engine table). Pure-exponential f additionally
+dispatches to the two-pass ExpMP message-passing integrator — O(N d), no IT
+walk at all. ITNode is immutable, so one backend instance is thread-safe.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from repro.core import cordial as C
+from repro.core.engines.base import register_backend
+from repro.core.engines.spec import spec_of
+from repro.core.integrate import FTFI, ExpMP
+
+
+@register_backend("host")
+class HostBackend:
+    name = "host"
+
+    def __init__(self, tree, leaf_size: int = 64, seed: int = 0,
+                 use_expmp: bool = True):
+        self.ftfi = FTFI(tree, leaf_size=leaf_size, seed=seed)
+        self._expmp = ExpMP(tree) if use_expmp else None
+        self._grid_h = self._detect_grid_h(tree)
+
+    @staticmethod
+    def _detect_grid_h(tree):
+        """Same semantics as IntegrationPlan.grid_h: grid-aligned edge
+        weights AND an FFT-practical span (detect_grid's cap applied to the
+        realized distance scale, bounded here by the tree diameter)."""
+        from repro.graphs.traverse import tree_distances_from
+
+        h = C.detect_grid(tree.weights, np.zeros(1))
+        if h is None or tree.num_vertices < 2:
+            return h
+        far = int(np.argmax(tree_distances_from(tree, 0)))
+        diameter = float(np.max(tree_distances_from(tree, far)))
+        return None if diameter / h > 5e6 else h
+
+    @property
+    def grid_h(self):
+        return self._grid_h
+
+    def describe(self, fn) -> dict:
+        spec = spec_of(fn)
+        engine = ("exp_message_passing"
+                  if spec.mode == "exp" and self._expmp is not None
+                  else "recursive_ftfi")
+        return {"backend": self.name, "cross_engine": engine,
+                "grid_h": self.grid_h}
+
+    def integrate(self, fn, X):
+        spec = spec_of(fn)
+        if spec.mode == "exp" and self._expmp is not None:
+            lam, scale = spec.coeffs
+            return self._expmp.integrate(lam, np.asarray(X), scale=scale)
+        return self.ftfi.integrate(spec.cordial, np.asarray(X))
+
+    def fastmult(self, fn) -> Callable:
+        return lambda X: self.integrate(fn, X)

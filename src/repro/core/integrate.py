@@ -1,4 +1,6 @@
-"""Tree-field integration: BTFI oracle, recursive FTFI, and the jit plan.
+"""Tree-field integration: BTFI oracle, recursive FTFI, ExpMP, and the plan
+data (compile_plan). The jit plan *executor* lives in repro.core.engines.plan;
+the public entry point is repro.core.engines.Integrator.
 
 Correctness invariant (proved in comments below, tested in tests/test_core.py):
 the *additive* decomposition counts every ordered pair (v, j) exactly once.
@@ -28,7 +30,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.cordial import CordialFn, chebyshev_points, lagrange_matrix
+from repro.core.cordial import CordialFn
 from repro.core.integrator_tree import ITNode, build_integrator_tree
 from repro.graphs.graph import WeightedTree
 from repro.graphs.traverse import tree_all_pairs
@@ -79,24 +81,16 @@ class FTFI:
             out[node.vertex_ids] += fn(node.leaf_dists) @ X[node.vertex_ids]
             return
         p = node.pivot
-        if not hasattr(node, "_seg"):
-            # cache sorted orders + run boundaries once per IT (np.add.at is
-            # ~50x slower than reduceat for wide fields, e.g. GW transports)
-            node._seg = {}
-            for side, ids, idd in (("L", node.left_ids, node.left_id_d),
-                                   ("R", node.right_ids, node.right_id_d)):
-                order = np.argsort(idd, kind="stable")
-                sorted_idd = idd[order]
-                starts = np.flatnonzero(
-                    np.r_[True, sorted_idd[1:] != sorted_idd[:-1]])
-                node._seg[side] = (ids[order], starts)
-        for side_src, tgt_ids, tgt_id_d, tgt_d, src_d in (
-            ("R", node.left_ids, node.left_id_d, node.left_d, node.right_d),
-            ("L", node.right_ids, node.right_id_d, node.right_d, node.left_d),
+        # segment layouts are precomputed in build_integrator_tree: ITNode is
+        # immutable, so the walk is thread-safe and plans can share one IT
+        for src_sorted, starts, tgt_ids, tgt_id_d, tgt_d, src_d in (
+            (node.right_sorted_ids, node.right_seg_starts,
+             node.left_ids, node.left_id_d, node.left_d, node.right_d),
+            (node.left_sorted_ids, node.left_seg_starts,
+             node.right_ids, node.right_id_d, node.right_d, node.left_d),
         ):
             # X'[u] = sum over source vertices in distance-group u (Eq. 3);
             # the pivot IS included (group 0), per the paper.
-            src_sorted, starts = node._seg[side_src]
             Xp = np.add.reduceat(X[src_sorted], starts, axis=0).astype(out.dtype)
             # cross values per target distance-group: C @ X' (Eq. 4)
             cross = fn.matvec(tgt_d, src_d, Xp)  # (U_tgt, d)
@@ -292,124 +286,6 @@ def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
         pivots=np.asarray(pivots, dtype=np.int32), grid_h=h)
 
 
-# ----------------------------------------------------------------------------
-# Plan executor (jax): additive, static shapes, differentiable
-# ----------------------------------------------------------------------------
-
-
-def execute_plan(plan: IntegrationPlan, X, fn_eval: Callable,
-                 batched_matvec: Callable | None = None, degree: int = 32):
-    """Integrate field X (n, d) with scalar function `fn_eval` (jnp-traceable).
-
-    batched_matvec(tgt_d, tgt_d_mask, src_d, src_d_mask, Xp) -> (B, U_t, d):
-    structured multiply per node; defaults to batched Chebyshev interpolation
-    (spectral-exact for smooth fn_eval), differentiable w.r.t. fn_eval params.
-    """
-    import jax.numpy as jnp
-
-    if batched_matvec is None:
-        batched_matvec = lambda *a: chebyshev_batched_matvec(fn_eval, *a, degree=degree)
-
-    X = jnp.asarray(X)
-    squeeze = X.ndim == 1
-    if squeeze:
-        X = X[:, None]
-    d = X.shape[1]
-    Xpad = jnp.concatenate([X, jnp.zeros((1, d), X.dtype)], axis=0)
-    out = jnp.zeros_like(Xpad)
-
-    for lb in plan.leaf_buckets:
-        Xl = Xpad[lb.ids]  # (B, K, d)
-        M = fn_eval(jnp.asarray(lb.dists))  # (B, K, K)
-        pair_mask = lb.mask[:, :, None] & lb.mask[:, None, :]
-        M = jnp.where(jnp.asarray(pair_mask), M, 0.0)
-        contrib = jnp.einsum("bij,bjd->bid", M, Xl)
-        out = out.at[lb.ids].add(contrib * lb.mask[:, :, None])
-
-    for cb in plan.cross_buckets:
-        B, Us = cb.src_d.shape
-        Xs = Xpad[cb.src_ids] * cb.src_mask[:, :, None]  # (B, Ks, d)
-        Xp = jnp.zeros((B, Us, d), Xs.dtype)
-        bidx = jnp.arange(B)[:, None]
-        Xp = Xp.at[bidx, cb.src_id_d].add(Xs)  # masked segment sum (Eq. 3)
-        cross = batched_matvec(
-            jnp.asarray(cb.tgt_d), jnp.asarray(cb.tgt_d_mask),
-            jnp.asarray(cb.src_d), jnp.asarray(cb.src_d_mask), Xp)  # (B, Ut, d)
-        vals = cross[bidx, cb.tgt_id_d]  # (B, Kt, d)
-        out = out.at[cb.tgt_ids].add(vals * cb.tgt_mask[:, :, None])
-
-    # diagonal corrections: -f(0) X[p] once per internal node
-    f0 = fn_eval(jnp.zeros((1,)))[0]
-    out = out.at[plan.pivots].add(-f0 * Xpad[plan.pivots])
-
-    res = out[:-1]
-    return res[:, 0] if squeeze else res
-
-
-def chebyshev_batched_matvec(fn_eval, tgt_d, tgt_mask, src_d, src_mask, Xp,
-                             degree: int = 32):
-    """Batched low-rank multiply via per-node 2D Chebyshev interpolation."""
-    import jax.numpy as jnp
-
-    big = 1e30
-    x_lo = jnp.min(jnp.where(tgt_mask, tgt_d, big), axis=1)  # (B,)
-    x_hi = jnp.max(jnp.where(tgt_mask, tgt_d, -big), axis=1)
-    y_lo = jnp.min(jnp.where(src_mask, src_d, big), axis=1)
-    y_hi = jnp.max(jnp.where(src_mask, src_d, -big), axis=1)
-    r = degree
-    k = np.arange(r)
-    t = np.cos((2 * k + 1) * np.pi / (2 * r))  # (r,)
-    xc = (x_lo[:, None] + x_hi[:, None]) / 2 + (x_hi - x_lo)[:, None] / 2 * t  # (B, r)
-    yc = (y_lo[:, None] + y_hi[:, None]) / 2 + (y_hi - y_lo)[:, None] / 2 * t
-    Bmat = fn_eval(xc[:, :, None] + yc[:, None, :])  # (B, r, r)
-    Lx = _lagrange_batched(tgt_d, xc)  # (B, Kx, r)
-    Ly = _lagrange_batched(src_d, yc)  # (B, Ky, r)
-    tmp = jnp.einsum("bkr,bkd->brd", Ly, Xp)
-    tmp = jnp.einsum("bqr,brd->bqd", Bmat, tmp)
-    return jnp.einsum("bkq,bqd->bkd", Lx, tmp)
-
-
-def _lagrange_batched(pts, nodes):
-    import jax.numpy as jnp
-
-    r = nodes.shape[1]
-    k = np.arange(r)
-    w = ((-1.0) ** k) * np.sin((2 * k + 1) * np.pi / (2 * r))  # (r,)
-    diff = pts[:, :, None] - nodes[:, None, :]  # (B, K, r)
-    small = jnp.abs(diff) < 1e-12
-    diff = jnp.where(small, 1.0, diff)
-    terms = w[None, None, :] / diff
-    L = terms / jnp.sum(terms, axis=-1, keepdims=True)
-    any_small = jnp.any(small, axis=-1, keepdims=True)
-    return jnp.where(any_small, small.astype(L.dtype), L)
-
-
-def polynomial_batched_matvec(coeffs, tgt_d, tgt_mask, src_d, src_mask, Xp):
-    """Exact batched multiply for f = polynomial(coeffs) — differentiable
-    w.r.t. coeffs. O((Kt+Ks) * deg) per node."""
-    import jax.numpy as jnp
-
-    coeffs = jnp.asarray(coeffs)
-    Bdeg = coeffs.shape[0] - 1
-    xpow = _powers_b(tgt_d, Bdeg)  # (B, Kt, deg+1)
-    ypow = _powers_b(src_d, Bdeg)  # (B, Ks, deg+1)
-    ypow = ypow * src_mask[:, :, None]
-    S = jnp.einsum("bku,bkd->bud", ypow, Xp)  # (B, deg+1, d)
-    import math as _m
-    Wrows = []
-    for l in range(Bdeg + 1):
-        acc = 0.0
-        for tt in range(l, Bdeg + 1):
-            acc = acc + coeffs[tt] * _m.comb(tt, l) * S[:, tt - l]
-        Wrows.append(acc)
-    W = jnp.stack(Wrows, axis=1)  # (B, deg+1, d)
-    return jnp.einsum("bkl,bld->bkd", xpow, W)
-
-
-def _powers_b(x, B):
-    import jax.numpy as jnp
-
-    pows = [jnp.ones_like(x)]
-    for _ in range(B):
-        pows.append(pows[-1] * x)
-    return jnp.stack(pows, axis=-1)
+# The jax plan *executor* lives in repro.core.engines.plan (execute_plan and
+# the batched structured-multiply engines); this module owns only the host-side
+# integrators and the plan *data* (compile_plan).

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Callable
 
 import numpy as np
@@ -102,6 +101,34 @@ def make_sequence_fastmult(g: str, coeffs, L: int, causal: bool,
         if causal:
             return causal_toeplitz_matvec(F, X)
         return symmetric_toeplitz_matvec(F, X)
+
+    return fastmult
+
+
+# ----------------------------------------------------------------------------
+# tree / grid (IT-plan) fastmult factory
+# ----------------------------------------------------------------------------
+
+
+def make_tree_fastmult(integrator, g: str, coeffs,
+                       dist_scale: float = 1.0) -> Callable:
+    """FastMult_M for M = [f(dist_T(i,j))] via an `Integrator` backend.
+
+    Works on fields with arbitrary leading batch/head axes: the mask multiply
+    is linear in the field, so everything folds into the trailing field dim of
+    one plan execution. `integrator` is a repro.core.engines.Integrator (any
+    backend with a jit-able fastmult, i.e. plan or pallas)."""
+    f_eval = mask_f(g, coeffs, dist_scale)
+    base = integrator.fastmult(f_eval)
+
+    def fastmult(X):  # X: (..., L, c)
+        shape = X.shape
+        L = shape[-2]
+        Xf = jnp.moveaxis(X.reshape(-1, L, shape[-1]), 0, -1)  # (L, c, B*)
+        Xf = Xf.reshape(L, -1)
+        out = base(Xf.astype(jnp.float32))
+        out = out.reshape(L, shape[-1], -1)
+        return jnp.moveaxis(out, -1, 0).reshape(shape)
 
     return fastmult
 

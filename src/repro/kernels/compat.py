@@ -1,0 +1,5 @@
+"""Single place to absorb jax/Pallas API skew across versions."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

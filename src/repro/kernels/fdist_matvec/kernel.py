@@ -39,8 +39,10 @@ def _f_tile(s, coeffs, mode: str):
 
 
 def _fdist_kernel(x_ref, y_ref, v_ref, c_ref, o_ref, acc_ref, *,
-                  mode: str, nb: int):
-    j = pl.program_id(1)
+                  mode: str, nb: int, j_axis: int = 1):
+    """Shared body: `j_axis` is the grid axis that sweeps source blocks
+    (1 for the single-job kernel, 2 when a leading batch axis is present)."""
+    j = pl.program_id(j_axis)
 
     @pl.when(j == 0)
     def _init():
@@ -53,6 +55,48 @@ def _fdist_kernel(x_ref, y_ref, v_ref, c_ref, o_ref, acc_ref, *,
     @pl.when(j == nb - 1)
     def _done():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "blk_a", "blk_b",
+                                             "interpret"))
+def fdist_matvec_batched_pallas(x, y, v, coeffs, *, mode: str = "poly",
+                                blk_a: int = 128, blk_b: int = 128,
+                                interpret: bool = False):
+    """Batched fused f-distance matvec: one pallas_call over a whole bucket
+    of IT cross jobs. x: (B, a), y: (B, b), v: (B, b, d) -> out (B, a, d).
+
+    This is the kernel the plan executor's `pallas` backend feeds: each grid
+    step (n, i, j) builds one (blk_a, blk_b) tile of M_n = [f(x_n,i + y_n,j)]
+    in VMEM and accumulates M_n V_n without ever materializing M_n in HBM.
+    Padded tail entries (x=y=0, v=0) contribute exactly zero.
+    """
+    B, a = x.shape
+    b = y.shape[1]
+    d = v.shape[2]
+    blk_a = min(blk_a, a)
+    blk_b = min(blk_b, b)
+    pad_a = (-a) % blk_a
+    pad_b = (-b) % blk_b
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, pad_a)))[:, :, None]
+    yp = jnp.pad(y.astype(jnp.float32), ((0, 0), (0, pad_b)))[:, None, :]
+    vp = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, pad_b), (0, 0)))
+    na = (a + pad_a) // blk_a
+    nb = (b + pad_b) // blk_b
+    out = pl.pallas_call(
+        functools.partial(_fdist_kernel, mode=mode, nb=nb, j_axis=2),
+        grid=(B, na, nb),
+        in_specs=[
+            pl.BlockSpec((None, blk_a, 1), lambda n, i, j: (n, i, 0)),
+            pl.BlockSpec((None, 1, blk_b), lambda n, i, j: (n, 0, j)),
+            pl.BlockSpec((None, blk_b, d), lambda n, i, j: (n, j, 0)),
+            pl.BlockSpec((coeffs.shape[0],), lambda n, i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, blk_a, d), lambda n, i, j: (n, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, a + pad_a, d), v.dtype),
+        scratch_shapes=[pltpu.VMEM((blk_a, d), jnp.float32)],
+        interpret=interpret,
+    )(xp, yp, vp, coeffs.astype(jnp.float32))
+    return out[:, :a]
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "blk_a", "blk_b",

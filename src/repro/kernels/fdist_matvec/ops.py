@@ -1,11 +1,11 @@
-"""Jit'd public wrapper: picks the Pallas kernel on TPU, interpret-mode
+"""Jit'd public wrappers: pick the Pallas kernel on TPU, interpret-mode
 (= Python execution of the same kernel body) elsewhere for validation."""
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.fdist_matvec.kernel import fdist_matvec_pallas
-from repro.kernels.fdist_matvec.ref import fdist_matvec_ref
+from repro.kernels.fdist_matvec.kernel import (fdist_matvec_batched_pallas,
+                                               fdist_matvec_pallas)
 
 
 def fdist_matvec(x, y, v, coeffs, mode: str = "poly", blk_a: int = 256,
@@ -13,3 +13,16 @@ def fdist_matvec(x, y, v, coeffs, mode: str = "poly", blk_a: int = 256,
     on_tpu = jax.default_backend() == "tpu"
     return fdist_matvec_pallas(x, y, v, coeffs, mode=mode, blk_a=blk_a,
                                blk_b=blk_b, interpret=not on_tpu)
+
+
+def fdist_matvec_batched(x, y, v, coeffs, mode: str = "poly",
+                         blk_a: int = 128, blk_b: int = 128,
+                         interpret: bool | None = None):
+    """Bucketed form used by the plan executor: (B, a) x (B, b) x (B, b, d)
+    -> (B, a, d). `interpret=None` auto-selects: compiled on TPU, interpreted
+    elsewhere (bit-exact kernel semantics on CPU for tests/CI)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return fdist_matvec_batched_pallas(x, y, v, coeffs, mode=mode,
+                                       blk_a=blk_a, blk_b=blk_b,
+                                       interpret=interpret)

@@ -542,7 +542,7 @@ def topo_decomposition(cfg, coeffs, L: int, rank: int = 24):
     Bmat = f_eval(nodes[:, None] - nodes[None, :])  # (H, r, r)
 
     def lagr(pos):  # pos: () -> (r,)
-        from repro.core.integrate import _lagrange_batched
+        from repro.core.engines.plan import _lagrange_batched
         pts = jnp.reshape(jnp.asarray(pos, jnp.float32), (1, 1))
         return _lagrange_batched(pts, nodes[None, :])[0, 0]  # (r,)
 

@@ -6,27 +6,39 @@ IT-plan FastMult (exact). 3 learnable mask scalars per layer (synced).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.integrate import compile_plan, execute_plan
-from repro.core.masks import GS, masked_linear_attention
+from repro.core.engines import Integrator
+from repro.core.masks import make_tree_fastmult, masked_linear_attention
 from repro.graphs.graph import grid_graph
 from repro.graphs.mst import minimum_spanning_tree
 from repro.models import attention as A
 from repro.models.layers import dense_init, dtype_of, gated_mlp, gated_mlp_init, rms_norm
 
 
-def build_grid_plan(cfg):
-    """IT plan for the patch-grid MST (built once per config)."""
+def build_grid_integrator(cfg, backend: str | None = None) -> Integrator:
+    """Integrator over the patch-grid MST (built once per config). The MST of
+    a unit-weight grid graph is grid-aligned (grid_h == 1), so general mask
+    functions ride the exact Hankel/FFT cross engine automatically."""
     side = int(round(np.sqrt(cfg.num_prefix_embeddings)))
     assert side * side == cfg.num_prefix_embeddings
     g = grid_graph(side, side)
     mst = minimum_spanning_tree(g)
-    return compile_plan(mst, leaf_size=16)
+    backend = backend or getattr(cfg, "topo_backend", "plan")
+    return Integrator(mst, backend=backend, leaf_size=16)
+
+
+def build_grid_plan(cfg, backend: str | None = None) -> Integrator:
+    """Deprecated: use build_grid_integrator. Returns an Integrator now, NOT
+    an IntegrationPlan — pass it to vit.forward, not to execute_plan."""
+    import warnings
+
+    warnings.warn(
+        "vit.build_grid_plan is deprecated and now returns an Integrator; "
+        "use vit.build_grid_integrator", DeprecationWarning, stacklevel=2)
+    return build_grid_integrator(cfg, backend=backend)
 
 
 def _vit_block_init(key, cfg, dtype):
@@ -60,38 +72,15 @@ def init_params(cfg, key, num_classes: int = 1000, patch_dim: int = 768):
     }
 
 
-def _grid_fastmult(plan, fn_eval):
-    """FastMult_M via the IT plan; linear in the field, so all batch/head/
-    channel axes fold into the trailing field dim of one plan execution."""
-
-    def fastmult(X):  # X: (..., L, c)
-        shape = X.shape
-        L = shape[-2]
-        Xf = jnp.moveaxis(X.reshape(-1, L, shape[-1]), 0, -1)  # (L, c, B*)
-        Xf = Xf.reshape(L, -1)
-        out = execute_plan(plan, Xf.astype(jnp.float32), fn_eval, degree=16)
-        out = out.reshape(L, shape[-1], -1)
-        return jnp.moveaxis(out, -1, 0).reshape(shape)
-
-    return fastmult
-
-
-def topo_vit_attention(cfg, p, p_topo, x, plan):
+def topo_vit_attention(cfg, p, p_topo, x, integ):
     B, L, _ = x.shape
     q, k, v = A._project_qkv(cfg, p["attn"], x,
                              jnp.zeros((B, L), jnp.int32), rope=False)
     qf = A.phi_features(q, cfg.performer_phi)
     kf = A.phi_features(k, cfg.performer_phi)
     coeffs = A.topo_mask_coeffs(cfg, p_topo)[0]  # synced: same across heads
-
-    def fn_eval(z):
-        acc = jnp.zeros_like(z)
-        zs = z * cfg.topo_dist_scale
-        for t in range(coeffs.shape[0] - 1, -1, -1):
-            acc = acc * zs + coeffs[t]
-        return GS[cfg.topo_g](acc)
-
-    fastmult = _grid_fastmult(plan, fn_eval)
+    fastmult = make_tree_fastmult(integ, cfg.topo_g, coeffs,
+                                  cfg.topo_dist_scale)
     # (B,L,H,m) -> heads folded into batch for Alg. 1
     qf_ = qf.transpose(0, 2, 1, 3)
     kf_ = kf.transpose(0, 2, 1, 3)
@@ -101,8 +90,9 @@ def topo_vit_attention(cfg, p, p_topo, x, plan):
     return out @ p["attn"]["wo"]
 
 
-def forward(cfg, params, patches, plan):
-    """patches: (B, L, patch_dim) -> logits (B, num_classes)."""
+def forward(cfg, params, patches, integ):
+    """patches: (B, L, patch_dim) -> logits (B, num_classes).
+    `integ` is the grid Integrator from build_grid_integrator."""
     x = patches.astype(dtype_of(cfg)) @ params["patch_proj"]["kernel"]
     x = x + params["patch_proj"]["bias"] + params["pos_embed"][None]
     B, L, _ = x.shape
@@ -110,7 +100,7 @@ def forward(cfg, params, patches, plan):
     def body(x, p):
         h = rms_norm(x, p["attn_norm"]["scale"], cfg.norm_eps, plus_one=True)
         if cfg.attention_variant == "topo":
-            x = x + topo_vit_attention(cfg, p, p["topo"], h, plan)
+            x = x + topo_vit_attention(cfg, p, p["topo"], h, integ)
         else:
             x = x + A.performer_attention_train(
                 cfg, p["attn"], h,

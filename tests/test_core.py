@@ -3,11 +3,11 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import cordial as C
-from repro.core.integrate import (BTFI, FTFI, compile_plan, execute_plan,
-                                  polynomial_batched_matvec)
+from repro.core.engines import execute_plan, polynomial_batched_matvec
+from repro.core.integrate import BTFI, FTFI, compile_plan
 from repro.core.integrator_tree import build_integrator_tree, it_stats
 from repro.core import approx
 from repro.graphs.graph import (caterpillar_tree, grid_graph, path_graph,

@@ -1,6 +1,6 @@
 """Graph substrate: MST, traversals, meshes."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.graphs.graph import Graph, random_tree, synthetic_graph
 from repro.graphs.meshes import icosphere, mesh_graph, torus_mesh, vertex_normals

@@ -1,9 +1,8 @@
 """Topological masking: Algorithm 1, Toeplitz fastmult, cordial decode."""
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import masks as MK
 from repro.core.toeplitz import (causal_toeplitz_matvec,
@@ -91,19 +90,22 @@ def test_chebyshev_separable_decode(rng):
     assert max(errs) < 1e-4
 
 
-def test_grid_mask_plan_fastmult(rng):
-    """ViT grid masks through the IT plan == dense mask multiply."""
-    from repro.core.integrate import compile_plan, execute_plan
+@pytest.mark.parametrize("backend", ["plan", "pallas"])
+def test_grid_mask_fastmult(backend, rng):
+    """ViT grid masks through the Integrator == dense mask multiply, with
+    batch/head axes folded by the tree fastmult factory."""
+    from repro.core.engines import Integrator
     from repro.graphs.graph import grid_graph
     from repro.graphs.mst import minimum_spanning_tree
     from repro.graphs.traverse import tree_all_pairs
 
     g = grid_graph(6, 6)
     mst = minimum_spanning_tree(g)
-    plan = compile_plan(mst, leaf_size=8)
+    integ = Integrator(mst, backend=backend, leaf_size=8)
     D = tree_all_pairs(mst)
-    f = lambda z: jnp.exp(-0.3 * z)
-    X = jnp.asarray(rng.normal(size=(36, 5)), jnp.float32)
-    ref = np.exp(-0.3 * D) @ np.asarray(X)
-    got = np.asarray(execute_plan(plan, X, f, degree=16))
+    coeffs = jnp.asarray([0.0, -0.3], jnp.float32)
+    X = jnp.asarray(rng.normal(size=(2, 36, 5)), jnp.float32)  # batched field
+    ref = np.einsum("lk,bkd->bld", np.exp(-0.3 * D), np.asarray(X))
+    fm = MK.make_tree_fastmult(integ, "exp", coeffs, dist_scale=1.0)
+    got = np.asarray(fm(X))
     assert np.max(np.abs(got - ref)) / np.max(np.abs(ref)) < 1e-5

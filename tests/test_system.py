@@ -62,18 +62,18 @@ def test_topovit_forward(rng):
     from repro.models import vit
 
     cfg = get_smoke_config("topovit_b16").replace(dtype="float32")
-    plan = vit.build_grid_plan(cfg)
+    integ = vit.build_grid_integrator(cfg)
     params = vit.init_params(cfg, jax.random.PRNGKey(0), num_classes=10,
                              patch_dim=48)
     patches = jnp.asarray(
         rng.normal(size=(2, cfg.num_prefix_embeddings, 48)), jnp.float32)
-    logits = vit.forward(cfg, params, patches, plan)
+    logits = vit.forward(cfg, params, patches, integ)
     assert logits.shape == (2, 10)
     assert np.isfinite(np.asarray(logits)).all()
 
     # gradients flow into the 3 mask parameters
     def loss(p):
-        lg = vit.forward(cfg, p, patches, plan)
+        lg = vit.forward(cfg, p, patches, integ)
         return jnp.sum(lg ** 2)
 
     g = jax.grad(loss)(params)
