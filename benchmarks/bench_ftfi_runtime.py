@@ -1,10 +1,17 @@
 """Paper Fig. 3 / Sec 5: BTFI vs FTFI runtime (preprocessing + integration)
 as a function of N, on synthetic path+random-edge graphs and mesh graphs —
-now with a --backend axis so the BTFI-vs-host-vs-plan-vs-pallas speedup is
+with a --backend axis so the BTFI-vs-host-vs-plan-vs-pallas speedup is
 reproducible from one command:
 
   PYTHONPATH=src python benchmarks/bench_ftfi_runtime.py \
       --backend host,plan,pallas --sizes 1000,4000
+
+Methodology:
+  * pre_s is a COLD build (flat-IT + plan caches cleared per backend) and is
+    reported with its breakdown: pre_it_s (flat IT construction) vs
+    pre_plan_s (plan bucketing / backend assembly on a warm IT cache);
+  * int_s is measured after a jit warmup call, so compile time never leaks
+    into the steady-state integration number.
 """
 from __future__ import annotations
 
@@ -18,14 +25,15 @@ if __package__ in (None, ""):  # `python benchmarks/bench_ftfi_runtime.py`
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 from benchmarks.common import emit, timeit
-from repro.core import BTFI, Exponential, Integrator
+from repro.core import (BTFI, Exponential, Integrator, build_flat_it,
+                        clear_flat_cache, clear_plan_cache)
 from repro.graphs.graph import synthetic_graph
 from repro.graphs.meshes import icosphere, mesh_graph
 from repro.graphs.mst import minimum_spanning_tree
 
 
 def run(sizes=(1000, 4000, 10000), mesh_subdiv=(3, 4), repeat=2,
-        backends=("host",), leaf_size=256):
+        backends=("host", "plan", "pallas"), leaf_size=256):
     rng = np.random.default_rng(0)
     fn = Exponential(-0.5)
     rows = []
@@ -52,24 +60,34 @@ def run(sizes=(1000, 4000, 10000), mesh_subdiv=(3, 4), repeat=2,
             opts = {"use_expmp": False} if backend == "host" else {}
             mk_integ = lambda: Integrator(tree, backend=backend,
                                           leaf_size=leaf_size, **opts)
-            t_pre = timeit(mk_integ, repeat=1, warmup=0)
+            # cold IT build, then backend assembly on the now-warm IT cache:
+            # the two add up to a full cold preprocessing pass
+            clear_flat_cache()
+            clear_plan_cache()
+            t_pre_it = timeit(lambda: build_flat_it(tree, leaf_size=leaf_size),
+                              repeat=1, warmup=0)
+            t_pre_plan = timeit(mk_integ, repeat=1, warmup=0)
+            t_pre = t_pre_it + t_pre_plan
             integ = mk_integ()
             engine = integ.describe(fn)["cross_engine"]
             run_once = lambda: np.asarray(integ.integrate(fn, X))
-            t_int = timeit(run_once, repeat=repeat)
+            # timeit's warmup call absorbs jit compilation before timing
+            t_int = timeit(run_once, repeat=repeat, warmup=1)
             got = run_once()
             err = (np.max(np.abs(got - ref))
                    / max(np.max(np.abs(ref)), 1e-9))
             total_f = t_pre + t_int
             total_b = t_pre_btfi + t_int_btfi
-            emit(f"fig3/{name}/n{n}/{backend}_pre", t_pre)
+            emit(f"fig3/{name}/n{n}/{backend}_pre", t_pre,
+                 f"it={t_pre_it*1e3:.1f}ms plan={t_pre_plan*1e3:.1f}ms")
             emit(f"fig3/{name}/n{n}/{backend}_int", t_int,
                  f"speedup_total={total_b/total_f:.2f}x "
                  f"speedup_int={t_int_btfi/t_int:.2f}x relerr={err:.1e} "
                  f"engine={engine}")
             rows.append({
                 "case": name, "n": n, "backend": backend, "engine": engine,
-                "pre_s": t_pre, "int_s": t_int,
+                "pre_s": t_pre, "pre_it_s": t_pre_it,
+                "pre_plan_s": t_pre_plan, "int_s": t_int,
                 "btfi_pre_s": t_pre_btfi, "btfi_int_s": t_int_btfi,
                 "speedup_total": total_b / total_f,
                 "speedup_int": t_int_btfi / t_int, "rel_err": float(err),
@@ -79,7 +97,7 @@ def run(sizes=(1000, 4000, 10000), mesh_subdiv=(3, 4), repeat=2,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--backend", default="host",
+    ap.add_argument("--backend", default="host,plan,pallas",
                     help="comma list of host,plan,pallas")
     ap.add_argument("--sizes", default="1000,4000")
     ap.add_argument("--mesh-subdiv", default="3")

@@ -1,0 +1,92 @@
+"""CI smoke gate over BENCH_ftfi_runtime.json + IT-build wall clock.
+
+Fails (exit 1) when:
+  * any exact-engine row reports rel_err > --max-rel-err (default 1e-4) —
+    chebyshev rows are approximate by design and only get a loose sanity
+    bound;
+  * the flat IT build at n=2000 on path / star / caterpillar / synthetic-MST
+    topologies exceeds --it-ceiling seconds (a deliberately generous bound:
+    the vectorized builder runs in tens of milliseconds, so tripping it
+    means the hot path got re-pythonized) or loses Lemma-3.1 balance.
+
+  PYTHONPATH=src python -m benchmarks.check_bench BENCH_ftfi_runtime.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+if __package__ in (None, ""):
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+APPROX_ENGINES = {"chebyshev"}
+APPROX_REL_ERR = 1e-2
+
+
+def check_json(path: str, max_rel_err: float) -> list[str]:
+    with open(path) as fh:
+        rows = json.load(fh)["rows"]
+    errors = []
+    if not rows:
+        errors.append(f"{path}: no benchmark rows")
+    for r in rows:
+        bound = (APPROX_REL_ERR if r["engine"] in APPROX_ENGINES
+                 else max_rel_err)
+        if r["rel_err"] > bound:
+            errors.append(
+                f"{r['case']}/n{r['n']}/{r['backend']} ({r['engine']}): "
+                f"rel_err {r['rel_err']:.2e} > {bound:.0e}")
+    return errors
+
+
+def check_it_build(n: int, ceiling: float) -> list[str]:
+    import numpy as np  # noqa: F401  (env sanity before heavy imports)
+    from repro.core import build_flat_it, clear_flat_cache, flat_stats
+    from repro.graphs.graph import (caterpillar_tree, path_graph, star_tree,
+                                    synthetic_graph)
+    from repro.graphs.mst import minimum_spanning_tree
+
+    cases = {
+        "path": path_graph(n),
+        "star": star_tree(n, seed=0),
+        "caterpillar": caterpillar_tree(n, seed=0),
+        "synthetic_mst": minimum_spanning_tree(
+            synthetic_graph(n, n // 2, seed=1)),
+    }
+    errors = []
+    for name, tree in cases.items():
+        clear_flat_cache()
+        t0 = time.perf_counter()
+        flat = build_flat_it(tree, leaf_size=64)
+        dt = time.perf_counter() - t0
+        stats = flat_stats(flat)
+        if dt > ceiling:
+            errors.append(f"IT build {name} n={n}: {dt:.2f}s > {ceiling}s "
+                          "ceiling (re-pythonized hot path?)")
+        if not stats["balance_ok"]:
+            errors.append(f"IT build {name} n={n}: balance_ok=False")
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json", nargs="?", default="BENCH_ftfi_runtime.json")
+    ap.add_argument("--max-rel-err", type=float, default=1e-4)
+    ap.add_argument("--it-n", type=int, default=2000)
+    ap.add_argument("--it-ceiling", type=float, default=5.0)
+    args = ap.parse_args()
+
+    errors = check_json(args.json, args.max_rel_err)
+    errors += check_it_build(args.it_n, args.it_ceiling)
+    if errors:
+        for e in errors:
+            print(f"GATE FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    print("perf smoke gate: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,12 +3,44 @@ Prints ``name,us_per_call,derived`` CSV lines; the fig3 suite additionally
 writes BENCH_ftfi_runtime.json so the perf trajectory accumulates across PRs.
 
   python -m benchmarks.run [--quick] [--only fig3,fig4,...]
-          [--backend host,plan,pallas]
+          [--backend host,plan,pallas] [--baseline prev_BENCH.json]
 """
 import argparse
 import json
 import sys
 import traceback
+
+
+def _load_baseline(baseline_path):
+    """Read the baseline rows up front — BENCH_ftfi_runtime.json is a valid
+    baseline path, and fig3 overwrites it before the deltas print."""
+    try:
+        with open(baseline_path) as fh:
+            return json.load(fh)["rows"]
+    except (OSError, KeyError, json.JSONDecodeError) as e:
+        print(f"# --baseline: cannot read {baseline_path}: {e}",
+              file=sys.stderr)
+        return None
+
+
+def _print_baseline_deltas(rows, base_rows, baseline_path):
+    """Per-row deltas of the fig3 suite against a previous
+    BENCH_ftfi_runtime.json (rows matched by case/n/backend)."""
+    base = {(r["case"], r["n"], r["backend"]): r for r in base_rows}
+    print(f"# deltas vs {baseline_path} (negative = faster now)")
+    print("case,n,backend,pre_s_old,pre_s_new,pre_x,int_s_old,int_s_new,"
+          "int_x,speedup_total_old,speedup_total_new")
+    for r in rows:
+        b = base.get((r["case"], r["n"], r["backend"]))
+        if b is None:
+            print(f"{r['case']},{r['n']},{r['backend']},<no baseline row>")
+            continue
+        pre_x = b["pre_s"] / max(r["pre_s"], 1e-12)
+        int_x = b["int_s"] / max(r["int_s"], 1e-12)
+        print(f"{r['case']},{r['n']},{r['backend']},"
+              f"{b['pre_s']:.4f},{r['pre_s']:.4f},{pre_x:.2f}x,"
+              f"{b['int_s']:.5f},{r['int_s']:.5f},{int_x:.2f}x,"
+              f"{b['speedup_total']:.2f},{r['speedup_total']:.2f}")
 
 
 def main() -> None:
@@ -18,8 +50,12 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--backend", default="host",
                     help="comma list of Integrator backends for fig3/tab1")
+    ap.add_argument("--baseline", default=None,
+                    help="previous BENCH_ftfi_runtime.json to diff fig3 "
+                         "rows against")
     args = ap.parse_args()
     backends = tuple(args.backend.split(","))
+    baseline_rows = _load_baseline(args.baseline) if args.baseline else None
 
     from benchmarks import (bench_ftfi_runtime, bench_graph_classification,
                             bench_gw, bench_learnable_f,
@@ -51,6 +87,9 @@ def main() -> None:
             if name == "fig3":
                 with open("BENCH_ftfi_runtime.json", "w") as fh:
                     json.dump({"suite": "fig3", "rows": result}, fh, indent=1)
+                if baseline_rows is not None:
+                    _print_baseline_deltas(result, baseline_rows,
+                                           args.baseline)
         except Exception:
             traceback.print_exc()
             failed.append(name)

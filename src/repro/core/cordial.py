@@ -133,10 +133,19 @@ def detect_grid(x, y, tol=1e-9) -> float | None:
     Uses a float-gcd; returns None if no reasonable grid exists (h too small).
     """
     vals = np.abs(np.concatenate([np.asarray(x).ravel(), np.asarray(y).ravel()]))
-    vals = vals[vals > tol]
+    vals = np.unique(vals[vals > tol])  # dedupe: the gcd loop is per-value
     if vals.size == 0:
         return 1.0
-    g = float(vals[0])
+    # fast path: the smallest value divides everything (unit/rational-weight
+    # trees) — one vectorized residual check instead of the gcd loop. Below
+    # the 1e-7 noise floor the residual test is meaningless (tol-scale
+    # values pass it spuriously), so such inputs take the gcd loop, which
+    # rejects them exactly as before.
+    h = float(vals[0])
+    mult = vals / h
+    if h >= 1e-7 and float(np.max(np.abs(vals - np.round(mult) * h))) <= tol:
+        return None if float(vals[-1] / h) > 5e6 else h
+    g = h
     for v in vals[1:]:
         g = _fgcd(g, float(v), tol)
         if g < 1e-7:

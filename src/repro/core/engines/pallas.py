@@ -4,8 +4,11 @@ fdist_matvec TPU kernel.
 Per-bucket cross jobs (B, U_t) x (B, U_s) are batched straight into
 `fdist_matvec_batched` for the in-kernel f families (poly / exp / expq /
 rational) — each tile of M is built in VMEM and fed to the MXU, never
-materialized in HBM. General f falls back to the exact Hankel/FFT engine on
-grid-aligned trees, else batched Chebyshev. Off-TPU the kernel runs in
+materialized in HBM. The segment-summed source field Xp arrives as a static
+slice of the executor's single fused segment-sum (see engines.plan), and the
+jitted fastmult closure is cached per family spec via the inherited
+PlanBackend machinery. General f falls back to the exact Hankel/FFT engine
+on grid-aligned trees, else batched Chebyshev. Off-TPU the kernel runs in
 interpret mode, so results (and tests) are platform-independent.
 """
 from __future__ import annotations

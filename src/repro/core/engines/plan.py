@@ -36,12 +36,18 @@ def execute_plan(plan: IntegrationPlan, X, fn_eval: Callable,
                  cross_multiply: Callable | None = None):
     """Integrate field X (n, d) with scalar function `fn_eval` (jnp-traceable).
 
+    The cross data-flow is fully precompiled into the plan's flat index
+    arrays, so the executor is a single gather + segment-sum (Eq. 3), one
+    cross-multiply dispatch per size bucket, and a single gather +
+    scatter-add (Eq. 4) — no per-bucket Python re-wrapping of index arrays.
+
     cross_multiply(cb: CrossBucket, Xp (B, U_s, d)) -> (B, U_t, d): structured
     multiply per bucket. `batched_matvec(tgt_d, tgt_mask, src_d, src_mask, Xp)`
     is the legacy array-level form; both default to batched Chebyshev
     interpolation (spectral-exact for smooth fn_eval, differentiable w.r.t.
     fn_eval parameters).
     """
+    import jax
     import jax.numpy as jnp
 
     if cross_multiply is None:
@@ -70,15 +76,22 @@ def execute_plan(plan: IntegrationPlan, X, fn_eval: Callable,
         contrib = jnp.einsum("bij,bjd->bid", M, Xl)
         out = out.at[lb.ids].add(contrib * lb.mask[:, :, None])
 
-    for cb in plan.cross_buckets:
-        B, Us = cb.src_d.shape
-        Xs = Xpad[cb.src_ids] * cb.src_mask[:, :, None]  # (B, Ks, d)
-        Xp = jnp.zeros((B, Us, d), Xs.dtype)
-        bidx = jnp.arange(B)[:, None]
-        Xp = Xp.at[bidx, cb.src_id_d].add(Xs)  # masked segment sum (Eq. 3)
-        cross = cross_multiply(cb, Xp)  # (B, Ut, d)
-        vals = cross[bidx, cb.tgt_id_d]  # (B, Kt, d)
-        out = out.at[cb.tgt_ids].add(vals * cb.tgt_mask[:, :, None])
+    if plan.cross_buckets:
+        # Eq. 3 for every node at once: X'[g] = sum of source-vertex fields
+        # per distance group (pivot/pad groups are empty -> zero)
+        Xp_flat = jax.ops.segment_sum(Xpad[plan.src_gather], plan.src_seg,
+                                      num_segments=plan.n_src_groups)
+        parts = []
+        for cb in plan.cross_buckets:
+            B, Us = cb.src_d.shape
+            Ut = cb.tgt_d.shape[1]
+            Xp = Xp_flat[cb.src_off:cb.src_off + B * Us].reshape(B, Us, d)
+            parts.append(cross_multiply(cb, Xp).reshape(B * Ut, d))
+        cross_flat = (jnp.concatenate(parts, axis=0) if len(parts) > 1
+                      else parts[0])
+        # Eq. 4 for every node at once: gather each target's group value and
+        # scatter-add into the output field
+        out = out.at[plan.tgt_scatter].add(cross_flat[plan.tgt_gather])
 
     # diagonal corrections: -f(0) X[p] once per internal node
     f0 = fn_eval(jnp.zeros((1,)))[0]
@@ -205,19 +218,63 @@ def hankel_batched_matvec(fn_eval, h: float, cb: CrossBucket, Xp):
 # ----------------------------------------------------------------------------
 
 
+def _trace_state_clean() -> bool:
+    """True when no jax trace is currently active (safe to memoize)."""
+    try:
+        import jax
+
+        return jax.core.trace_state_clean()
+    except Exception:
+        return True
+
+
+class _PlanFastMult:
+    """One cached X -> M_f X closure per (plan, f-family).
+
+    `trace_count` increments once per executor trace (jitted path) or per
+    call (eager path): back-to-back jitted calls with the same shapes leave
+    it unchanged, which is exactly the no-retrace property the fastmult
+    cache exists for."""
+
+    def __init__(self, eager: Callable, jit_compile: bool):
+        self.trace_count = 0
+        self.jitted = bool(jit_compile)
+
+        def counted(X):
+            self.trace_count += 1
+            return eager(X)
+
+        if jit_compile:
+            import jax
+
+            self._call = jax.jit(counted)
+        else:
+            self._call = counted
+
+    def __call__(self, X):
+        return self._call(X)
+
+
 @register_backend("plan")
 class PlanBackend:
     """Bucketed static-shape executor; cross engine chosen per f family:
     exact polynomial/exponential LDR engines, the exact Hankel/FFT engine on
-    grid-aligned trees, Chebyshev interpolation otherwise."""
+    grid-aligned trees, Chebyshev interpolation otherwise.
+
+    `fastmult` closures are jitted (when the f family is traceable) and
+    cached per family spec, so repeated `integrate` calls pay zero
+    re-dispatch/re-trace overhead."""
 
     name = "plan"
 
     def __init__(self, tree, leaf_size: int = 64, seed: int = 0,
                  degree: int = 32, detect_grid_spacing: bool = True):
+        from repro.core.lru import BoundedLRU
+
         self.plan = compile_plan(tree, leaf_size=leaf_size, seed=seed,
                                  detect_grid_spacing=detect_grid_spacing)
         self.degree = degree
+        self._fm_cache = BoundedLRU(64)
 
     @property
     def grid_h(self):
@@ -254,9 +311,43 @@ class PlanBackend:
     def integrate(self, fn, X):
         return self.fastmult(fn)(X)
 
+    @staticmethod
+    def _jit_ok(fn) -> bool:
+        """Jit only f families whose fn_eval is built from concrete floats:
+        AnyFn / raw callables may close over numpy-only code (or tracers from
+        an enclosing jit), so they stay eager — which is still traceable
+        inline by an outer jit."""
+        from repro.core import cordial as C
+
+        return (isinstance(fn, C.CordialFn)
+                and not isinstance(fn, C.AnyFn)
+                and type(fn) is not C.CordialFn)
+
     def fastmult(self, fn) -> Callable:
-        """Jit-able closure X -> M_f X (plan arrays are trace-time constants)."""
+        """Cached, jit-compiled closure X -> M_f X (plan arrays are
+        trace-time constants). Keyed semantically by (mode, coeffs, scale)
+        for the structured families — equal f objects share one compiled
+        executor — and by object identity for opaque callables. Opaque
+        callables built inside an active jit trace (e.g. mask closures over
+        traced coefficients) are NOT cached: pinning them would retain the
+        trace's tracers, and their id can never produce a future hit."""
         spec = spec_of(fn)
+        jit_ok = self._jit_ok(fn)
+        if spec.mode is None and not _trace_state_clean():
+            _, cross = self.select_cross(spec)
+            return _PlanFastMult(
+                partial(execute_plan, self.plan, fn_eval=spec.fn_eval,
+                        cross_multiply=cross, degree=self.degree),
+                jit_compile=False)
+        key = ((spec.mode, spec.coeffs, spec.scale, self.degree)
+               if spec.mode is not None else (None, id(fn), self.degree))
+        hit = self._fm_cache.get(key)
+        if hit is not None:
+            return hit[0]
         _, cross = self.select_cross(spec)
-        return partial(execute_plan, self.plan, fn_eval=spec.fn_eval,
-                       cross_multiply=cross, degree=self.degree)
+        eager = partial(execute_plan, self.plan, fn_eval=spec.fn_eval,
+                        cross_multiply=cross, degree=self.degree)
+        fm = _PlanFastMult(eager, jit_compile=jit_ok)
+        # pin `fn` alongside: id-based keys must not outlive their object
+        self._fm_cache.put(key, (fm, fn))
+        return fm

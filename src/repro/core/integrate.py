@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.cordial import CordialFn
 from repro.core.integrator_tree import ITNode, build_integrator_tree
+from repro.core.lru import BoundedLRU
 from repro.graphs.graph import WeightedTree
 from repro.graphs.traverse import tree_all_pairs
 
@@ -151,23 +152,24 @@ class ExpMP:
 
 
 # ----------------------------------------------------------------------------
-# Plan compilation: flatten the IT into padded, bucketed, static arrays
+# Plan compilation: flatten the IT into padded, bucketed, static arrays plus
+# concatenated gather/segment/scatter index plans for the fused executor
 # ----------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
 class CrossBucket:
-    # all arrays are padded to the bucket maxima; PAD vertex id == n (dummy row)
-    tgt_ids: np.ndarray  # (B, K_t) int
-    tgt_id_d: np.ndarray  # (B, K_t) int (index into tgt_d)
-    tgt_mask: np.ndarray  # (B, K_t) bool
+    """Group-distance arrays for one size bucket, padded to the bucket maxima
+    (the cross-engine inputs). The per-vertex gather/scatter plumbing lives in
+    the flat index arrays on `IntegrationPlan`; `src_off`/`tgt_off` locate
+    this bucket's (B*U) group block inside those flat layouts."""
+
     tgt_d: np.ndarray  # (B, U_t) float
-    tgt_d_mask: np.ndarray  # (B, U_t)
-    src_ids: np.ndarray  # (B, K_s)
-    src_id_d: np.ndarray  # (B, K_s)
-    src_mask: np.ndarray  # (B, K_s)
-    src_d: np.ndarray  # (B, U_s)
-    src_d_mask: np.ndarray  # (B, U_s)
+    tgt_d_mask: np.ndarray  # (B, U_t) bool
+    src_d: np.ndarray  # (B, U_s) float
+    src_d_mask: np.ndarray  # (B, U_s) bool
+    src_off: int = 0  # offset of this bucket's B*U_s groups in the flat X'
+    tgt_off: int = 0  # offset of this bucket's B*U_t groups in the flat cross
 
 
 @dataclasses.dataclass
@@ -179,41 +181,69 @@ class LeafBucket:
 
 @dataclasses.dataclass
 class IntegrationPlan:
+    """Static integration plan. Beyond the padded per-bucket engine inputs,
+    the whole executor data-flow is precompiled into four flat index arrays:
+
+      X'_flat  = segment_sum(Xpad[src_gather], src_seg)   # one gather+segsum
+      cross    = per-bucket engine on X'_flat slices       # one dispatch each
+      out     += scatter_add at tgt_scatter of cross[tgt_gather]
+
+    so `execute_plan` is a handful of fused array ops, not a Python loop
+    re-wrapping numpy arrays per bucket."""
+
     n: int
     cross_buckets: list
     leaf_buckets: list
     pivots: np.ndarray  # (P,) vertex ids, one per internal node (with repeats)
     grid_h: float | None = None  # common distance grid (if any) for hankel engine
+    # fused executor index arrays (real entries only — no padding, no masks)
+    src_gather: np.ndarray | None = None  # (S,) vertex ids into Xpad
+    src_seg: np.ndarray | None = None  # (S,) flat source-group index
+    n_src_groups: int = 0  # sum over buckets of B*U_s
+    tgt_gather: np.ndarray | None = None  # (T,) flat cross-group index
+    tgt_scatter: np.ndarray | None = None  # (T,) vertex ids into out
+    n_tgt_groups: int = 0  # sum over buckets of B*U_t
+    num_cross_jobs: int = 0
 
     def num_jobs(self):
-        return sum(b.tgt_ids.shape[0] for b in self.cross_buckets)
+        return self.num_cross_jobs
+
+
+_PLAN_CACHE = BoundedLRU(32)
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
 
 
 def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
-                 detect_grid_spacing: bool = True) -> IntegrationPlan:
-    root = build_integrator_tree(tree, leaf_size=leaf_size, seed=seed)
+                 detect_grid_spacing: bool = True,
+                 use_cache: bool = True) -> IntegrationPlan:
+    """Compile (or fetch from the content-hash cache) the integration plan.
+
+    Plans are immutable after construction, so repeated `Integrator`
+    construction over the same topology (serving, benchmarks, ViT mask
+    rebuilds) amortizes to a dict lookup."""
+    from repro.core.itree_flat import build_flat_it, tree_fingerprint
+
+    if use_cache:
+        key = (tree_fingerprint(tree), max(int(leaf_size), 6),
+               detect_grid_spacing)
+        hit = _PLAN_CACHE.get(key)
+        if hit is not None:
+            return hit
+
+    flat = build_flat_it(tree, leaf_size=leaf_size, seed=seed,
+                         use_cache=use_cache)
     n = tree.num_vertices
-    jobs = []  # (tgt_ids_nopivot, tgt_id_d, tgt_d, src_ids_nopivot, src_id_d, src_d)
-    leaves = []
-    pivots = []
-
-    def walk(node: ITNode):
-        if node.is_leaf:
-            leaves.append((node.vertex_ids, node.leaf_dists))
-            return
-        pivots.append(node.pivot)
-        for t_ids, t_idd, t_d, s_ids, s_idd, s_d in (
-            (node.left_ids, node.left_id_d, node.left_d,
-             node.right_ids, node.right_id_d, node.right_d),
-            (node.right_ids, node.right_id_d, node.right_d,
-             node.left_ids, node.left_id_d, node.left_d),
-        ):
-            # drop pivot from targets AND sources (masked-source optimization)
-            jobs.append((t_ids[1:], t_idd[1:], t_d, s_ids[1:], s_idd[1:], s_d))
-        walk(node.left)
-        walk(node.right)
-
-    walk(root)
+    # one job per (node, direction): targets/sources both exclude the pivot
+    # (masked-source optimization); distance arrays keep the pivot group 0
+    jobs = []
+    for i in range(flat.num_internal):
+        L, R = flat.left[i], flat.right[i]
+        for t, s in ((L, R), (R, L)):
+            jobs.append((t.ids[1:], t.id_d[1:], t.d, s.ids[1:], s.id_d[1:],
+                         s.d))
 
     # --- bucket cross jobs by ceil(log2(max dim)) => <=2x padding waste
     def bkey(job):
@@ -225,40 +255,40 @@ def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
         buckets.setdefault(bkey(job), []).append(job)
 
     cross_buckets = []
-    for key in sorted(buckets):
-        bjobs = buckets[key]
-        Kt = max(j[0].size for j in bjobs)
+    src_gather_parts, src_seg_parts = [], []
+    tgt_gather_parts, tgt_scatter_parts = [], []
+    src_goff = tgt_goff = 0
+    for key_b in sorted(buckets):
+        bjobs = buckets[key_b]
         Ut = max(j[2].size for j in bjobs)
-        Ks = max(j[3].size for j in bjobs)
         Us = max(j[5].size for j in bjobs)
         B = len(bjobs)
         cb = CrossBucket(
-            tgt_ids=np.full((B, Kt), n, dtype=np.int32),
-            tgt_id_d=np.zeros((B, Kt), dtype=np.int32),
-            tgt_mask=np.zeros((B, Kt), dtype=bool),
             tgt_d=np.zeros((B, Ut), dtype=np.float64),
             tgt_d_mask=np.zeros((B, Ut), dtype=bool),
-            src_ids=np.full((B, Ks), n, dtype=np.int32),
-            src_id_d=np.zeros((B, Ks), dtype=np.int32),
-            src_mask=np.zeros((B, Ks), dtype=bool),
             src_d=np.zeros((B, Us), dtype=np.float64),
             src_d_mask=np.zeros((B, Us), dtype=bool),
+            src_off=src_goff, tgt_off=tgt_goff,
         )
         for b, (t_ids, t_idd, t_d, s_ids, s_idd, s_d) in enumerate(bjobs):
-            kt, ut, ks, us = t_ids.size, t_d.size, s_ids.size, s_d.size
-            cb.tgt_ids[b, :kt] = t_ids
-            cb.tgt_id_d[b, :kt] = t_idd
-            cb.tgt_mask[b, :kt] = True
-            cb.tgt_d[b, :ut] = t_d
-            cb.tgt_d_mask[b, :ut] = True
-            cb.src_ids[b, :ks] = s_ids
-            cb.src_id_d[b, :ks] = s_idd
-            cb.src_mask[b, :ks] = True
-            cb.src_d[b, :us] = s_d
-            cb.src_d_mask[b, :us] = True
+            cb.tgt_d[b, :t_d.size] = t_d
+            cb.tgt_d_mask[b, :t_d.size] = True
+            cb.src_d[b, :s_d.size] = s_d
+            cb.src_d_mask[b, :s_d.size] = True
+            src_gather_parts.append(s_ids)
+            src_seg_parts.append(src_goff + b * Us + s_idd)
+            tgt_gather_parts.append(tgt_goff + b * Ut + t_idd)
+            tgt_scatter_parts.append(t_ids)
+        src_goff += B * Us
+        tgt_goff += B * Ut
         cross_buckets.append(cb)
 
+    def _cat(parts, dtype):
+        return (np.concatenate(parts).astype(dtype) if parts
+                else np.zeros(0, dtype))
+
     # --- single leaf bucket
+    leaves = list(zip(flat.leaf_ids, flat.leaf_dists))
     leaf_buckets = []
     if leaves:
         K = max(ids.size for ids, _ in leaves)
@@ -278,12 +308,24 @@ def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
     h = None
     if detect_grid_spacing:
         from repro.core.cordial import detect_grid
-        all_d = np.concatenate(
-            [np.concatenate([j[2], j[5]]) for j in jobs] or [np.zeros(1)])
+        all_d = np.unique(np.concatenate(
+            [s.d for i in range(flat.num_internal)
+             for s in (flat.left[i], flat.right[i])] or [np.zeros(1)]))
         h = detect_grid(all_d, np.zeros(1))
-    return IntegrationPlan(
+    plan = IntegrationPlan(
         n=n, cross_buckets=cross_buckets, leaf_buckets=leaf_buckets,
-        pivots=np.asarray(pivots, dtype=np.int32), grid_h=h)
+        pivots=flat.pivots.astype(np.int32), grid_h=h,
+        src_gather=_cat(src_gather_parts, np.int32),
+        src_seg=_cat(src_seg_parts, np.int32),
+        n_src_groups=src_goff,
+        tgt_gather=_cat(tgt_gather_parts, np.int32),
+        tgt_scatter=_cat(tgt_scatter_parts, np.int32),
+        n_tgt_groups=tgt_goff,
+        num_cross_jobs=len(jobs),
+    )
+    if use_cache:
+        _PLAN_CACHE.put(key, plan)
+    return plan
 
 
 # The jax plan *executor* lives in repro.core.engines.plan (execute_plan and

@@ -1,10 +1,15 @@
 """IntegratorTree (IT): the paper's Sec-3.1 data structure.
 
-Built once per input tree (host-side numpy, O(N log N)); reused for any number
-of tensor fields. Each non-leaf node stores the balanced-separator split
-(T_left, T_right, pivot) from Lemma 3.1 plus the distance-group arrays
-(left-ids / left-d / left-id-d — right-s is represented implicitly by
-left_id_d-based segment sums).
+This module is now a thin compatibility shim over the flat, vectorized
+builder in `repro.core.itree_flat` (frontier-at-a-time numpy, content-hash
+cached). `build_integrator_tree` materializes the recursive `ITNode` view
+that the host FTFI walks; the plan compiler consumes the flat form directly.
+
+Each non-leaf node stores the balanced-separator split (T_left, T_right,
+pivot) from Lemma 3.1 plus the distance-group arrays (left-ids / left-d /
+left-id-d); vertex ids are ordered by ascending pivot distance, so the
+segment-sum layout (`left_sorted_ids`, `left_seg_starts`) coincides with the
+id arrays themselves.
 """
 from __future__ import annotations
 
@@ -12,6 +17,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.itree_flat import FlatIT, build_flat_it
 from repro.graphs.graph import WeightedTree
 
 
@@ -48,185 +54,38 @@ class ITNode:
         return self.leaf_dists is not None
 
 
-def _adjacency(tree: WeightedTree):
-    return tree.csr()
-
-
-def _subtree_local(indptr, indices, data, vertices, glob_to_loc):
-    """Local CSR restricted to `vertices` (assumed connected)."""
-    return indptr, indices, data  # we traverse with membership checks instead
-
-
-def _centroid_split(indptr, indices, data, vertices: np.ndarray,
-                    member: np.ndarray, rng: np.random.Generator):
-    """Lemma 3.1: find pivot p and a partition of p's branch components into
-    (left, right) with each side >= n/4 (plus the shared pivot).
-
-    `member` is a global boolean mask selecting this sub-tree's vertices.
-    Returns (pivot, left_ids, right_ids) — both include the pivot.
-    """
-    n = vertices.size
-    root = int(vertices[0])
-    # iterative DFS to get order & parent within the sub-tree
-    order = np.empty(n, dtype=np.int64)
-    parent = {}
-    stack = [root]
-    seen = {root}
-    k = 0
-    while stack:
-        u = stack.pop()
-        order[k] = u
-        k += 1
-        for ei in range(indptr[u], indptr[u + 1]):
-            v = int(indices[ei])
-            if member[v] and v not in seen:
-                seen.add(v)
-                parent[v] = u
-                stack.append(v)
-    assert k == n, "sub-tree is disconnected"
-    # subtree sizes via reverse order
-    size = {int(u): 1 for u in order}
-    for u in order[::-1]:
-        u = int(u)
-        if u != root:
-            size[parent[u]] += size[u]
-    # centroid: vertex whose removal leaves all components <= n/2
-    pivot = root
-    while True:
-        best_child, best_size = None, -1
-        for ei in range(indptr[pivot], indptr[pivot + 1]):
-            v = int(indices[ei])
-            if member[v] and (v in parent and parent[v] == pivot):
-                if size[v] > best_size:
-                    best_child, best_size = v, size[v]
-        up_size = n - size[pivot]  # component through the parent
-        if best_size <= n // 2 and up_size <= n // 2:
-            break
-        if up_size > best_size:
-            # re-root: walking towards parent; easiest is to recompute by
-            # moving pivot to parent side. Classic trick: move to the heavy side.
-            pivot = parent[pivot]
-            # recompute sizes w.r.t. re-rooted orientation lazily: instead of
-            # re-rooting, use the standard invariant: moving towards the heavy
-            # component strictly decreases its size; sizes w.r.t. original root
-            # still identify the heavy side via up/down test above.
-            # (size[] stays rooted at `root`; up_size formula handles it.)
-        else:
-            pivot = best_child
-    # components around pivot: each neighbour branch
-    comp_ids: list[list[int]] = []
-    for ei in range(indptr[pivot], indptr[pivot + 1]):
-        v = int(indices[ei])
-        if not member[v]:
-            continue
-        # collect branch through v (excluding pivot)
-        branch = []
-        bstack = [v]
-        bseen = {pivot, v}
-        while bstack:
-            u = bstack.pop()
-            branch.append(u)
-            for ej in range(indptr[u], indptr[u + 1]):
-                wv = int(indices[ej])
-                if member[wv] and wv not in bseen:
-                    bseen.add(wv)
-                    bstack.append(wv)
-        comp_ids.append(branch)
-    # greedy balanced partition (largest-first into the lighter side)
-    comp_ids.sort(key=len, reverse=True)
-    left: list[int] = []
-    right: list[int] = []
-    for branch in comp_ids:
-        (left if len(left) <= len(right) else right).extend(branch)
-    left_ids = np.array([pivot] + left, dtype=np.int64)
-    right_ids = np.array([pivot] + right, dtype=np.int64)
-    return pivot, left_ids, right_ids
-
-
-def _pivot_distances(indptr, indices, data, pivot: int, ids: np.ndarray,
-                     member_side: np.ndarray):
-    """Distances from pivot to each vertex of `ids` (restricted traversal)."""
-    dist = {pivot: 0.0}
-    stack = [pivot]
-    while stack:
-        u = stack.pop()
-        for ei in range(indptr[u], indptr[u + 1]):
-            v = int(indices[ei])
-            if member_side[v] and v not in dist:
-                dist[v] = dist[u] + float(data[ei])
-                stack.append(v)
-    return np.array([dist[int(i)] for i in ids], dtype=np.float64)
-
-
-def _leaf_distance_matrix(indptr, indices, data, ids: np.ndarray,
-                          member: np.ndarray) -> np.ndarray:
-    k = ids.size
-    loc = {int(v): i for i, v in enumerate(ids)}
-    D = np.zeros((k, k), dtype=np.float64)
-    for si, s in enumerate(ids):
-        dist = {int(s): 0.0}
-        stack = [int(s)]
-        while stack:
-            u = stack.pop()
-            for ei in range(indptr[u], indptr[u + 1]):
-                v = int(indices[ei])
-                if member[v] and v not in dist:
-                    dist[v] = dist[u] + float(data[ei])
-                    stack.append(v)
-        for v, dv in dist.items():
-            D[si, loc[v]] = dv
-    return D
-
-
-def _segment_layout(ids: np.ndarray, id_d: np.ndarray):
-    """Sorted order + run boundaries for distance-group segment sums."""
-    order = np.argsort(id_d, kind="stable")
-    sorted_idd = id_d[order]
-    starts = np.flatnonzero(np.r_[True, sorted_idd[1:] != sorted_idd[:-1]])
-    return ids[order], starts
+def _materialize(flat: FlatIT, ref: int) -> ITNode:
+    if ref < 0:
+        li = -ref - 1
+        return ITNode(vertex_ids=flat.leaf_ids[li],
+                      depth=int(flat.leaf_depth[li]),
+                      leaf_dists=flat.leaf_dists[li])
+    L, R = flat.left[ref], flat.right[ref]
+    return ITNode(
+        vertex_ids=np.concatenate([L.ids, R.ids[1:]]),
+        depth=int(flat.node_depth[ref]),
+        pivot=int(flat.pivots[ref]),
+        left=_materialize(flat, int(flat.children[ref, 0])),
+        right=_materialize(flat, int(flat.children[ref, 1])),
+        left_ids=L.ids, right_ids=R.ids,
+        left_d=L.d, right_d=R.d,
+        left_id_d=L.id_d, right_id_d=R.id_d,
+        # ids are emitted in ascending-distance order, so the segment layout
+        # is the identity permutation
+        left_sorted_ids=L.ids, left_seg_starts=L.seg_starts,
+        right_sorted_ids=R.ids, right_seg_starts=R.seg_starts,
+    )
 
 
 def build_integrator_tree(tree: WeightedTree, leaf_size: int = 64,
                           seed: int = 0) -> ITNode:
-    """Construct the IT for `tree` (paper Sec 3.1). leaf_size = t (>=6)."""
-    leaf_size = max(int(leaf_size), 6)
-    indptr, indices, data = _adjacency(tree)
-    rng = np.random.default_rng(seed)
-    n = tree.num_vertices
-    member_buf = np.zeros(n, dtype=bool)
+    """Construct the IT for `tree` (paper Sec 3.1). leaf_size = t (>=6).
 
-    def build(vertex_ids: np.ndarray, depth: int) -> ITNode:
-        member = np.zeros(n, dtype=bool)
-        member[vertex_ids] = True
-        if vertex_ids.size <= leaf_size:
-            D = _leaf_distance_matrix(indptr, indices, data, vertex_ids, member)
-            return ITNode(vertex_ids=vertex_ids, depth=depth, leaf_dists=D)
-        pivot, left_ids, right_ids = _centroid_split(
-            indptr, indices, data, vertex_ids, member, rng)
-        mleft = np.zeros(n, dtype=bool)
-        mleft[left_ids] = True
-        mright = np.zeros(n, dtype=bool)
-        mright[right_ids] = True
-        dl = _pivot_distances(indptr, indices, data, pivot, left_ids, mleft)
-        dr = _pivot_distances(indptr, indices, data, pivot, right_ids, mright)
-        left_d, left_id_d = np.unique(dl, return_inverse=True)
-        right_d, right_id_d = np.unique(dr, return_inverse=True)
-        assert left_d[0] == 0.0 and right_d[0] == 0.0  # pivot group
-        lso, lst = _segment_layout(left_ids, left_id_d)
-        rso, rst = _segment_layout(right_ids, right_id_d)
-        return ITNode(
-            vertex_ids=vertex_ids, depth=depth, pivot=pivot,
-            left=build(left_ids, depth + 1),
-            right=build(right_ids, depth + 1),
-            left_ids=left_ids, right_ids=right_ids,
-            left_d=left_d, right_d=right_d,
-            left_id_d=left_id_d.astype(np.int64),
-            right_id_d=right_id_d.astype(np.int64),
-            left_sorted_ids=lso, left_seg_starts=lst,
-            right_sorted_ids=rso, right_seg_starts=rst,
-        )
-
-    return build(np.arange(n, dtype=np.int64), 0)
+    Delegates to the flat vectorized builder (cached per tree content hash)
+    and materializes the recursive node view on top of its arrays.
+    """
+    flat = build_flat_it(tree, leaf_size=leaf_size, seed=seed)
+    return _materialize(flat, flat.root_ref)
 
 
 def it_stats(root: ITNode) -> dict:

@@ -1,0 +1,50 @@
+"""One bounded LRU mapping for every host-side memo in the package (flat-IT
+builds, compiled plans, jitted fastmult closures, mask/ViT integrators), so
+the eviction/recency rules live in exactly one place."""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Hashable
+
+
+class BoundedLRU:
+    def __init__(self, maxsize: int):
+        self.maxsize = int(maxsize)
+        self._d: OrderedDict = OrderedDict()
+
+    def get(self, key: Hashable, default: Any = None) -> Any:
+        try:
+            val = self._d[key]
+        except KeyError:
+            return default
+        self._d.move_to_end(key)
+        return val
+
+    def put(self, key: Hashable, value: Any) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+    def peek(self, key: Hashable, default: Any = None) -> Any:
+        """Read without promoting — for maintenance scans that must not
+        disturb the recency order."""
+        return self._d.get(key, default)
+
+    def discard(self, key: Hashable) -> None:
+        self._d.pop(key, None)
+
+    def keys(self):
+        return list(self._d.keys())
+
+    def items(self):
+        return list(self._d.items())
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._d

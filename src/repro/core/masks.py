@@ -13,12 +13,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import weakref
 from typing import Callable
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.lru import BoundedLRU
 from repro.core.toeplitz import causal_toeplitz_matvec, symmetric_toeplitz_matvec
 
 
@@ -110,6 +112,19 @@ def make_sequence_fastmult(g: str, coeffs, L: int, causal: bool,
 # ----------------------------------------------------------------------------
 
 
+_TREE_FM_CACHE = BoundedLRU(64)
+
+
+def _purge_dead_tree_fm_entries():
+    """Drop entries whose Integrator has been garbage collected: their
+    id-based key can never hit again, and keeping them would pin the plan
+    arrays and compiled closures of dead integrators. Peeks (no recency
+    promotion) so the scan doesn't scramble LRU eviction order."""
+    for key, entry in _TREE_FM_CACHE.items():
+        if entry[1]() is None:
+            _TREE_FM_CACHE.discard(key)
+
+
 def make_tree_fastmult(integrator, g: str, coeffs,
                        dist_scale: float = 1.0) -> Callable:
     """FastMult_M for M = [f(dist_T(i,j))] via an `Integrator` backend.
@@ -117,7 +132,23 @@ def make_tree_fastmult(integrator, g: str, coeffs,
     Works on fields with arbitrary leading batch/head axes: the mask multiply
     is linear in the field, so everything folds into the trailing field dim of
     one plan execution. `integrator` is a repro.core.engines.Integrator (any
-    backend with a jit-able fastmult, i.e. plan or pallas)."""
+    backend with a jit-able fastmult, i.e. plan or pallas).
+
+    For concrete (non-traced) coefficients the closure is memoized per
+    (integrator, g, coeffs, dist_scale), so repeated mask rebuilds (serving,
+    eval loops) reuse one compiled executor; traced coeffs (training under
+    jit) bypass the cache and trace inline as before."""
+    key = None
+    traced = any(isinstance(leaf, jax.core.Tracer)
+                 for leaf in jax.tree_util.tree_leaves(coeffs))
+    if not traced:
+        _purge_dead_tree_fm_entries()
+        c = np.asarray(coeffs)
+        key = (id(integrator), g, float(dist_scale), c.shape,
+               c.tobytes())
+        hit = _TREE_FM_CACHE.get(key)
+        if hit is not None and hit[1]() is integrator:
+            return hit[0]
     f_eval = mask_f(g, coeffs, dist_scale)
     base = integrator.fastmult(f_eval)
 
@@ -130,6 +161,15 @@ def make_tree_fastmult(integrator, g: str, coeffs,
         out = out.reshape(L, shape[-1], -1)
         return jnp.moveaxis(out, -1, 0).reshape(shape)
 
+    if key is not None:
+        try:
+            ref = weakref.ref(integrator)
+        except TypeError:
+            ref = None
+        if ref is not None:
+            # weakly referenced: the purge above drops the entry (and the
+            # plan/closure memory it pins) once the integrator dies
+            _TREE_FM_CACHE.put(key, (fastmult, ref))
     return fastmult
 
 

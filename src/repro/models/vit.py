@@ -18,16 +18,29 @@ from repro.models import attention as A
 from repro.models.layers import dense_init, dtype_of, gated_mlp, gated_mlp_init, rms_norm
 
 
+from repro.core.lru import BoundedLRU
+
+_GRID_INTEGRATOR_CACHE = BoundedLRU(8)
+
+
 def build_grid_integrator(cfg, backend: str | None = None) -> Integrator:
     """Integrator over the patch-grid MST (built once per config). The MST of
     a unit-weight grid graph is grid-aligned (grid_h == 1), so general mask
-    functions ride the exact Hankel/FFT cross engine automatically."""
+    functions ride the exact Hankel/FFT cross engine automatically.
+
+    Memoized per (grid side, backend): repeated mask rebuilds return the same
+    Integrator, so its plan and compiled fastmult closures are reused (the
+    underlying IT/plan construction is additionally content-hash cached)."""
     side = int(round(np.sqrt(cfg.num_prefix_embeddings)))
     assert side * side == cfg.num_prefix_embeddings
-    g = grid_graph(side, side)
-    mst = minimum_spanning_tree(g)
     backend = backend or getattr(cfg, "topo_backend", "plan")
-    return Integrator(mst, backend=backend, leaf_size=16)
+    key = (side, backend)
+    integ = _GRID_INTEGRATOR_CACHE.get(key)
+    if integ is None:
+        mst = minimum_spanning_tree(grid_graph(side, side))
+        integ = Integrator(mst, backend=backend, leaf_size=16)
+        _GRID_INTEGRATOR_CACHE.put(key, integ)
+    return integ
 
 
 def build_grid_plan(cfg, backend: str | None = None) -> Integrator:

@@ -141,6 +141,28 @@ def test_itnode_is_immutable():
 
 
 @pytest.mark.parametrize("backend", ["plan", "pallas"])
+def test_fastmult_cache_hit_no_retrace(backend, rng):
+    """Satellite: the jitted fastmult closure is cached per family spec —
+    the second fastmult() returns the same object (even for an equal-valued
+    new fn instance) and back-to-back integrate calls do not re-trace."""
+    tree = random_tree(70, seed=4)
+    X = rng.normal(size=(70, 3))
+    integ = Integrator(tree, backend=backend, leaf_size=16)
+    fm1 = integ.fastmult(C.Exponential(-0.7, 1.3))
+    fm2 = integ.fastmult(C.Exponential(-0.7, 1.3))  # equal, distinct object
+    assert fm1 is fm2
+    assert fm1.jitted
+    np.asarray(fm1(X))
+    assert fm1.trace_count == 1
+    np.asarray(fm1(X))  # same shapes: cache hit, no retrace
+    assert fm1.trace_count == 1
+    np.asarray(integ.integrate(C.Exponential(-0.7, 1.3), X))
+    assert fm1.trace_count == 1
+    # different family spec -> different compiled closure
+    assert integ.fastmult(C.Exponential(-0.2)) is not fm1
+
+
+@pytest.mark.parametrize("backend", ["plan", "pallas"])
 def test_fastmult_is_jittable_and_differentiable(backend, rng):
     tree = random_tree(60, seed=9)
     X = jnp.asarray(rng.normal(size=(60, 2)), jnp.float32)
