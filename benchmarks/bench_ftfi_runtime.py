@@ -25,9 +25,9 @@ if __package__ in (None, ""):  # `python benchmarks/bench_ftfi_runtime.py`
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 from benchmarks.common import emit, timeit
-from repro.core import (BTFI, Exponential, Integrator, build_flat_it,
+from repro.core import (BTFI, Exponential, Forest, Integrator, build_flat_it,
                         clear_flat_cache, clear_plan_cache)
-from repro.graphs.graph import synthetic_graph
+from repro.graphs.graph import random_tree, synthetic_graph
 from repro.graphs.meshes import icosphere, mesh_graph
 from repro.graphs.mst import minimum_spanning_tree
 
@@ -92,7 +92,59 @@ def run(sizes=(1000, 4000, 10000), mesh_subdiv=(3, 4), repeat=2,
                 "speedup_total": total_b / total_f,
                 "speedup_int": t_int_btfi / t_int, "rel_err": float(err),
             })
+    # the forest row exercises the fused plan path: skip it for host-only
+    # runs (e.g. jax-free debugging) that asked for no jit backend at all
+    if set(backends) & {"plan", "pallas", "forest"}:
+        rows.append(_forest_row(rng, fn, repeat=repeat))
     return rows
+
+
+def _forest_row(rng, fn, num_trees=90, repeat=2):
+    """Forest row: one fused plan over a mixed-size forest vs the per-tree
+    host loop (the baseline occupies the btfi_* columns)."""
+    del rng  # dedicated stream: the row must not depend on which other
+    rng = np.random.default_rng(90)  # cases ran (stable case/n for --baseline)
+    trees = [random_tree(int(s), seed=i)
+             for i, s in enumerate(rng.integers(24, 96, size=num_trees))]
+    forest = Forest(trees)
+    n = forest.num_vertices
+    X = rng.normal(size=(n, 4))
+    # baseline: per-tree host loop (ExpMP off: measure the IT walk, as above)
+    mk_loop = lambda: Integrator.from_forest(forest, backend="host",
+                                             use_expmp=False)
+    clear_flat_cache()
+    clear_plan_cache()
+    t_pre_loop = timeit(mk_loop, repeat=1, warmup=0)
+    loop = mk_loop()
+    t_int_loop = timeit(lambda: np.asarray(loop.integrate(fn, X)),
+                        repeat=repeat)
+    ref = np.asarray(loop.integrate(fn, X))
+    emit(f"fig3/forest{num_trees}/n{n}/loop_pre", t_pre_loop)
+    emit(f"fig3/forest{num_trees}/n{n}/loop_int", t_int_loop)
+    # fused forest plan
+    mk_forest = lambda: Integrator.from_forest(forest, backend="plan")
+    clear_flat_cache()
+    clear_plan_cache()
+    t_pre = timeit(mk_forest, repeat=1, warmup=0)
+    integ = mk_forest()
+    engine = integ.describe(fn)["cross_engine"]
+    t_int = timeit(lambda: np.asarray(integ.integrate(fn, X)), repeat=repeat,
+                   warmup=1)
+    got = np.asarray(integ.integrate(fn, X))
+    err = np.max(np.abs(got - ref)) / max(np.max(np.abs(ref)), 1e-9)
+    total_f, total_b = t_pre + t_int, t_pre_loop + t_int_loop
+    emit(f"fig3/forest{num_trees}/n{n}/forest_pre", t_pre)
+    emit(f"fig3/forest{num_trees}/n{n}/forest_int", t_int,
+         f"speedup_total={total_b/total_f:.2f}x "
+         f"speedup_int={t_int_loop/t_int:.2f}x relerr={err:.1e} "
+         f"engine={engine}")
+    return {
+        "case": f"forest{num_trees}", "n": n, "backend": "forest",
+        "engine": engine, "pre_s": t_pre, "pre_it_s": t_pre,
+        "pre_plan_s": 0.0, "int_s": t_int, "btfi_pre_s": t_pre_loop,
+        "btfi_int_s": t_int_loop, "speedup_total": total_b / total_f,
+        "speedup_int": t_int_loop / t_int, "rel_err": float(err),
+    }
 
 
 def main():

@@ -1,4 +1,5 @@
-"""CI smoke gate over BENCH_ftfi_runtime.json + IT-build wall clock.
+"""CI smoke gate over BENCH_ftfi_runtime.json + IT-build wall clock + the
+fused forest plan.
 
 Fails (exit 1) when:
   * any exact-engine row reports rel_err > --max-rel-err (default 1e-4) —
@@ -7,7 +8,9 @@ Fails (exit 1) when:
   * the flat IT build at n=2000 on path / star / caterpillar / synthetic-MST
     topologies exceeds --it-ceiling seconds (a deliberately generous bound:
     the vectorized builder runs in tens of milliseconds, so tripping it
-    means the hot path got re-pythonized) or loses Lemma-3.1 balance.
+    means the hot path got re-pythonized) or loses Lemma-3.1 balance;
+  * the fused forest plan diverges from the per-tree host loop by more than
+    --forest-rel-err (default 1e-5) on a small mixed-size forest.
 
   PYTHONPATH=src python -m benchmarks.check_bench BENCH_ftfi_runtime.json
 """
@@ -71,16 +74,48 @@ def check_it_build(n: int, ceiling: float) -> list[str]:
     return errors
 
 
+def check_forest(max_rel_err: float) -> list[str]:
+    """Forest smoke: the fused forest plan must equal the per-tree host loop
+    on a small mixed-size forest, for an exact family AND a general f."""
+    import numpy as np
+    from repro.core import AnyFn, Exponential, Forest, Integrator
+    from repro.graphs.graph import (caterpillar_tree, path_graph, random_tree,
+                                    star_tree)
+
+    rng = np.random.default_rng(0)
+    trees = [random_tree(int(s), seed=i)
+             for i, s in enumerate(rng.integers(8, 48, size=12))]
+    trees += [path_graph(40), star_tree(30, seed=1),
+              caterpillar_tree(36, seed=2)]
+    forest = Forest(trees)
+    X = rng.normal(size=(forest.num_vertices, 3))
+    loop = Integrator.from_forest(forest, backend="host")
+    errors = []
+    for fn, label in ((Exponential(-0.6, 1.2), "exp"),
+                      (AnyFn(lambda z: 1.0 / (1.0 + z)), "anyfn")):
+        ref = np.asarray(loop.integrate(fn, X))
+        got = np.asarray(Integrator.from_forest(
+            forest, backend="plan", leaf_size=16).integrate(fn, X))
+        err = float(np.max(np.abs(got - ref)) / np.max(np.abs(ref)))
+        if err > max_rel_err:
+            errors.append(
+                f"forest plan vs per-tree loop ({label}): rel_err "
+                f"{err:.2e} > {max_rel_err:.0e}")
+    return errors
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("json", nargs="?", default="BENCH_ftfi_runtime.json")
     ap.add_argument("--max-rel-err", type=float, default=1e-4)
     ap.add_argument("--it-n", type=int, default=2000)
     ap.add_argument("--it-ceiling", type=float, default=5.0)
+    ap.add_argument("--forest-rel-err", type=float, default=1e-5)
     args = ap.parse_args()
 
     errors = check_json(args.json, args.max_rel_err)
     errors += check_it_build(args.it_n, args.it_ceiling)
+    errors += check_forest(args.forest_rel_err)
     if errors:
         for e in errors:
             print(f"GATE FAIL: {e}", file=sys.stderr)

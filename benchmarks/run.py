@@ -1,6 +1,7 @@
 """Benchmark harness: one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV lines; the fig3 suite additionally
-writes BENCH_ftfi_runtime.json so the perf trajectory accumulates across PRs.
+writes BENCH_ftfi_runtime.json and the fig5 suite writes
+BENCH_graph_classification.json so the perf trajectory accumulates across PRs.
 
   python -m benchmarks.run [--quick] [--only fig3,fig4,...]
           [--backend host,plan,pallas] [--baseline prev_BENCH.json]
@@ -50,6 +51,10 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--backend", default="host",
                     help="comma list of Integrator backends for fig3/tab1")
+    ap.add_argument("--fig5-backend", default="host,forest",
+                    help="comma list of host,plan,pallas,forest for the "
+                         "graph-classification suite (plan/pallas are "
+                         "per-graph jit loops: slow by design)")
     ap.add_argument("--baseline", default=None,
                     help="previous BENCH_ftfi_runtime.json to diff fig3 "
                          "rows against")
@@ -69,7 +74,9 @@ def main() -> None:
             backends=backends),
         "fig4": lambda: bench_mesh_interpolation.run(),
         "fig5": lambda: bench_graph_classification.run(
-            n_per_class=15 if args.quick else 30),
+            n_per_class=15 if args.quick else 30,
+            backends=tuple(b for b in args.fig5_backend.split(",") if b),
+            repeat=3 if args.quick else 6),
         "fig6": lambda: bench_learnable_f.run(steps=150 if args.quick else 300),
         "tab1": lambda: bench_topo_attention.run(
             backends=tuple(b for b in backends if b != "host") or ("plan",)),
@@ -90,6 +97,9 @@ def main() -> None:
                 if baseline_rows is not None:
                     _print_baseline_deltas(result, baseline_rows,
                                            args.baseline)
+            elif name == "fig5":
+                with open("BENCH_graph_classification.json", "w") as fh:
+                    json.dump({"suite": "fig5", "rows": result}, fh, indent=1)
         except Exception:
             traceback.print_exc()
             failed.append(name)

@@ -4,11 +4,14 @@ from repro.core.cordial import (  # noqa: F401
     Polynomial, Rational, Trigonometric,
 )
 from repro.core.integrate import (  # noqa: F401
-    BTFI, ExpMP, FTFI, IntegrationPlan, clear_plan_cache, compile_plan,
+    BTFI, ExpMP, FTFI, IntegrationPlan, clear_plan_cache,
+    compile_forest_plan, compile_plan,
 )
 from repro.core.itree_flat import (  # noqa: F401
-    FlatIT, build_flat_it, clear_flat_cache, flat_stats, tree_fingerprint,
+    FlatIT, build_flat_forest, build_flat_it, clear_flat_cache, flat_stats,
+    tree_fingerprint,
 )
+from repro.graphs.graph import Forest  # noqa: F401
 from repro.core.engines import (  # noqa: F401
     Integrator, available_backends, chebyshev_batched_matvec, execute_plan,
     polynomial_batched_matvec, register_backend,

@@ -9,8 +9,9 @@ Every integration backend registers itself under a short name and implements:
     grid_h -> float | None           # common distance grid, if any
 
 `Integrator(tree, backend="plan").integrate(fn, X)` is the one public API;
-later PRs (sharded plans, batched multi-tree serving, GPU backends) plug in
-as additional registered backends.
+`Integrator.from_forest(forest, ...)` is the same API over a packed Forest
+of trees (one fused plan, block-diagonal multiply). Later PRs (sharded
+plans, GPU backends) plug in as additional registered backends.
 """
 from __future__ import annotations
 
@@ -54,6 +55,39 @@ class Integrator:
         self.backend = backend
         self._impl = get_backend(backend)(tree, leaf_size=leaf_size,
                                           seed=seed, **opts)
+
+    @classmethod
+    def from_forest(cls, forest, backend: str = "plan", *,
+                    leaf_size: int = 64, seed: int = 0, **opts):
+        """Integrator over a whole `Forest` of trees with the packed-field
+        API: fields are (sum_t n_t, d), vertex v of tree t at row
+        `forest.offsets[t] + v` (see `Forest.pack`/`unpack`/`broadcast`).
+
+        On the plan/pallas backends the forest compiles into ONE fused
+        IntegrationPlan — `integrate`/`fastmult` run every tree in the same
+        handful of gather/segment-sum/scatter dispatches (one jit call for N
+        graphs instead of N). The host backend runs a per-tree reference
+        loop, which is also the baseline the fused path is benchmarked
+        against.
+
+        >>> forest = Forest([mst(g) for g in graphs])
+        >>> integ = Integrator.from_forest(forest, backend="plan")
+        >>> out = integ.integrate(Exponential(-0.5), forest.pack(fields))
+        """
+        from repro.graphs.graph import Forest
+
+        if not isinstance(forest, Forest):
+            raise TypeError(
+                f"from_forest expects a Forest, got {type(forest).__name__}; "
+                "wrap your trees: Integrator.from_forest(Forest(trees))")
+        return cls(forest, backend=backend, leaf_size=leaf_size, seed=seed,
+                   **opts)
+
+    @property
+    def num_trees(self):
+        """Number of trees (1 for single-tree integrators)."""
+        forest = getattr(self._impl, "forest", None)
+        return forest.num_trees if forest is not None else 1
 
     @property
     def grid_h(self):

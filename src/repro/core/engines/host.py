@@ -15,6 +15,7 @@ from repro.core import cordial as C
 from repro.core.engines.base import register_backend
 from repro.core.engines.spec import spec_of
 from repro.core.integrate import FTFI, ExpMP
+from repro.graphs.graph import Forest
 
 
 @register_backend("host")
@@ -23,6 +24,22 @@ class HostBackend:
 
     def __init__(self, tree, leaf_size: int = 64, seed: int = 0,
                  use_expmp: bool = True):
+        # Forests run as a per-tree Python loop here: the host backend is the
+        # reference (and the baseline the fused forest plan is benchmarked
+        # against), not a fused path.
+        self.forest = tree if isinstance(tree, Forest) else None
+        if self.forest is not None:
+            self._ftfis = [FTFI(t, leaf_size=leaf_size, seed=seed)
+                           for t in self.forest.trees]
+            self._expmps = ([ExpMP(t) for t in self.forest.trees]
+                            if use_expmp else None)
+            hs = [self._detect_grid_h(t) for t in self.forest.trees]
+            if any(h is None for h in hs):
+                self._grid_h = None
+            else:
+                # the forest's common grid is the gcd of per-tree spacings
+                self._grid_h = C.detect_grid(np.asarray(hs), np.zeros(1))
+            return
         self.ftfi = FTFI(tree, leaf_size=leaf_size, seed=seed)
         self._expmp = ExpMP(tree) if use_expmp else None
         self._grid_h = self._detect_grid_h(tree)
@@ -47,18 +64,35 @@ class HostBackend:
 
     def describe(self, fn) -> dict:
         spec = spec_of(fn)
-        engine = ("exp_message_passing"
-                  if spec.mode == "exp" and self._expmp is not None
+        use_expmp = (self._expmps if self.forest is not None
+                     else self._expmp) is not None
+        engine = ("exp_message_passing" if spec.mode == "exp" and use_expmp
                   else "recursive_ftfi")
-        return {"backend": self.name, "cross_engine": engine,
-                "grid_h": self.grid_h}
+        d = {"backend": self.name, "cross_engine": engine,
+             "grid_h": self.grid_h}
+        if self.forest is not None:
+            d["num_trees"] = self.forest.num_trees
+        return d
 
     def integrate(self, fn, X):
         spec = spec_of(fn)
+        X = np.asarray(X)
+        if self.forest is not None:
+            off = self.forest.offsets
+            outs = []
+            for i in range(self.forest.num_trees):
+                Xi = X[off[i]:off[i + 1]]
+                if spec.mode == "exp" and self._expmps is not None:
+                    lam, scale = spec.coeffs
+                    outs.append(self._expmps[i].integrate(lam, Xi,
+                                                          scale=scale))
+                else:
+                    outs.append(self._ftfis[i].integrate(spec.cordial, Xi))
+            return np.concatenate(outs, axis=0)
         if spec.mode == "exp" and self._expmp is not None:
             lam, scale = spec.coeffs
-            return self._expmp.integrate(lam, np.asarray(X), scale=scale)
-        return self.ftfi.integrate(spec.cordial, np.asarray(X))
+            return self._expmp.integrate(lam, X, scale=scale)
+        return self.ftfi.integrate(spec.cordial, X)
 
     def fastmult(self, fn) -> Callable:
         return lambda X: self.integrate(fn, X)

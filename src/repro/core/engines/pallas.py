@@ -39,6 +39,9 @@ class PallasBackend(PlanBackend):
         self.blk_b = blk_b
         self.interpret = interpret  # None -> auto (TPU compiled, else interp)
 
+    def _fm_opts_key(self) -> tuple:
+        return (self.blk_a, self.blk_b, self.interpret)
+
     def select_cross(self, spec: FamilySpec):
         if spec.mode in KERNEL_MODES:
             return (f"fdist_matvec:{spec.mode}",

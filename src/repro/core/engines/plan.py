@@ -23,7 +23,9 @@ import numpy as np
 
 from repro.core.engines.base import register_backend
 from repro.core.engines.spec import FamilySpec, spec_of
-from repro.core.integrate import CrossBucket, IntegrationPlan, compile_plan
+from repro.core.integrate import (CrossBucket, IntegrationPlan,
+                                  compile_forest_plan, compile_plan)
+from repro.graphs.graph import Forest
 
 
 # ----------------------------------------------------------------------------
@@ -271,10 +273,32 @@ class PlanBackend:
                  degree: int = 32, detect_grid_spacing: bool = True):
         from repro.core.lru import BoundedLRU
 
-        self.plan = compile_plan(tree, leaf_size=leaf_size, seed=seed,
-                                 detect_grid_spacing=detect_grid_spacing)
+        # a Forest compiles into ONE fused plan over the packed vertex space:
+        # the executor below is oblivious to how many trees it covers
+        self.forest = tree if isinstance(tree, Forest) else None
+        if self.forest is not None:
+            self.plan = compile_forest_plan(
+                self.forest, leaf_size=leaf_size, seed=seed,
+                detect_grid_spacing=detect_grid_spacing)
+        else:
+            self.plan = compile_plan(tree, leaf_size=leaf_size, seed=seed,
+                                     detect_grid_spacing=detect_grid_spacing)
         self.degree = degree
-        self._fm_cache = BoundedLRU(64)
+        # the semantically-keyed fastmult memo lives ON the plan object:
+        # plans are content-hash cached, so repeated Integrator construction
+        # over the same topology (bench steady state, serving, mask rebuilds)
+        # reuses the compiled closures instead of re-tracing per instance.
+        # Keys are prefixed with the backend name + opts (see fastmult), so
+        # differently-configured backends sharing one plan never serve each
+        # other's closures. Opaque id()-keyed fns stay in a per-instance
+        # memo: sharing them would pin arbitrary closures (and whatever they
+        # capture) for the plan-cache lifetime instead of the Integrator's.
+        cache = getattr(self.plan, "_fm_cache", None)
+        if cache is None:
+            cache = BoundedLRU(64)
+            self.plan._fm_cache = cache
+        self._fm_cache = cache
+        self._fm_cache_local = BoundedLRU(64)
 
     @property
     def grid_h(self):
@@ -305,11 +329,19 @@ class PlanBackend:
 
     def describe(self, fn) -> dict:
         name, _ = self.select_cross(spec_of(fn))
-        return {"backend": self.name, "cross_engine": name,
-                "grid_h": self.grid_h}
+        d = {"backend": self.name, "cross_engine": name,
+             "grid_h": self.grid_h}
+        if self.forest is not None:
+            d["num_trees"] = self.forest.num_trees
+        return d
 
     def integrate(self, fn, X):
         return self.fastmult(fn)(X)
+
+    def _fm_opts_key(self) -> tuple:
+        """Backend-specific options that must key the shared per-plan
+        fastmult memo (subclasses with extra knobs override)."""
+        return ()
 
     @staticmethod
     def _jit_ok(fn) -> bool:
@@ -339,9 +371,14 @@ class PlanBackend:
                 partial(execute_plan, self.plan, fn_eval=spec.fn_eval,
                         cross_multiply=cross, degree=self.degree),
                 jit_compile=False)
-        key = ((spec.mode, spec.coeffs, spec.scale, self.degree)
-               if spec.mode is not None else (None, id(fn), self.degree))
-        hit = self._fm_cache.get(key)
+        prefix = (self.name,) + self._fm_opts_key()
+        if spec.mode is not None:  # semantic key: shared across instances
+            cache = self._fm_cache
+            key = prefix + (spec.mode, spec.coeffs, spec.scale, self.degree)
+        else:  # id key: per instance, freed with this backend
+            cache = self._fm_cache_local
+            key = prefix + (None, id(fn), self.degree)
+        hit = cache.get(key)
         if hit is not None:
             return hit[0]
         _, cross = self.select_cross(spec)
@@ -349,5 +386,5 @@ class PlanBackend:
                         cross_multiply=cross, degree=self.degree)
         fm = _PlanFastMult(eager, jit_compile=jit_ok)
         # pin `fn` alongside: id-based keys must not outlive their object
-        self._fm_cache.put(key, (fm, fn))
+        cache.put(key, (fm, fn))
         return fm

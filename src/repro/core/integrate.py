@@ -216,26 +216,11 @@ def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
 
 
-def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
-                 detect_grid_spacing: bool = True,
-                 use_cache: bool = True) -> IntegrationPlan:
-    """Compile (or fetch from the content-hash cache) the integration plan.
-
-    Plans are immutable after construction, so repeated `Integrator`
-    construction over the same topology (serving, benchmarks, ViT mask
-    rebuilds) amortizes to a dict lookup."""
-    from repro.core.itree_flat import build_flat_it, tree_fingerprint
-
-    if use_cache:
-        key = (tree_fingerprint(tree), max(int(leaf_size), 6),
-               detect_grid_spacing)
-        hit = _PLAN_CACHE.get(key)
-        if hit is not None:
-            return hit
-
-    flat = build_flat_it(tree, leaf_size=leaf_size, seed=seed,
-                         use_cache=use_cache)
-    n = tree.num_vertices
+def _assemble_plan(flat, n: int, detect_grid_spacing: bool) -> IntegrationPlan:
+    """Flatten a (tree or forest) FlatIT into one IntegrationPlan: cross jobs
+    and leaves from EVERY tree share one global index space and are merged
+    into the same size-class buckets, so the executor's dispatch count is a
+    function of size diversity, not of how many trees the plan covers."""
     # one job per (node, direction): targets/sources both exclude the pivot
     # (masked-source optimization); distance arrays keep the pivot group 0
     jobs = []
@@ -287,10 +272,16 @@ def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
         return (np.concatenate(parts).astype(dtype) if parts
                 else np.zeros(0, dtype))
 
-    # --- single leaf bucket
-    leaves = list(zip(flat.leaf_ids, flat.leaf_dists))
+    # --- leaf buckets by ceil(log2(k)): a mixed-size forest pads each leaf
+    # to its size class, not to the global maximum (K^2 padding waste would
+    # dominate leaf-heavy forest plans)
+    leaf_groups: dict[int, list] = {}
+    for ids, D in zip(flat.leaf_ids, flat.leaf_dists):
+        leaf_groups.setdefault(
+            int(np.ceil(np.log2(max(ids.size, 2)))), []).append((ids, D))
     leaf_buckets = []
-    if leaves:
+    for key_b in sorted(leaf_groups):
+        leaves = leaf_groups[key_b]
         K = max(ids.size for ids, _ in leaves)
         B = len(leaves)
         lb = LeafBucket(
@@ -308,11 +299,14 @@ def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
     h = None
     if detect_grid_spacing:
         from repro.core.cordial import detect_grid
+        # one detection over the merged distances reconciles per-tree grids:
+        # the common h of a forest is the gcd of its trees' spacings (None if
+        # any tree is off-grid or the joint span is FFT-impractical)
         all_d = np.unique(np.concatenate(
             [s.d for i in range(flat.num_internal)
              for s in (flat.left[i], flat.right[i])] or [np.zeros(1)]))
         h = detect_grid(all_d, np.zeros(1))
-    plan = IntegrationPlan(
+    return IntegrationPlan(
         n=n, cross_buckets=cross_buckets, leaf_buckets=leaf_buckets,
         pivots=flat.pivots.astype(np.int32), grid_h=h,
         src_gather=_cat(src_gather_parts, np.int32),
@@ -323,6 +317,62 @@ def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
         n_tgt_groups=tgt_goff,
         num_cross_jobs=len(jobs),
     )
+
+
+def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
+                 detect_grid_spacing: bool = True,
+                 use_cache: bool = True) -> IntegrationPlan:
+    """Compile (or fetch from the content-hash cache) the integration plan.
+
+    Plans are immutable after construction, so repeated `Integrator`
+    construction over the same topology (serving, benchmarks, ViT mask
+    rebuilds) amortizes to a dict lookup. `seed` is part of the cache key:
+    differently-seeded builds must never alias to the first build."""
+    from repro.core.itree_flat import build_flat_it, tree_fingerprint
+
+    if use_cache:
+        key = (tree_fingerprint(tree), max(int(leaf_size), 6), int(seed),
+               detect_grid_spacing)
+        hit = _PLAN_CACHE.get(key)
+        if hit is not None:
+            return hit
+
+    flat = build_flat_it(tree, leaf_size=leaf_size, seed=seed,
+                         use_cache=use_cache)
+    plan = _assemble_plan(flat, tree.num_vertices, detect_grid_spacing)
+    if use_cache:
+        _PLAN_CACHE.put(key, plan)
+    return plan
+
+
+def compile_forest_plan(forest, leaf_size: int = 64, seed: int = 0,
+                        detect_grid_spacing: bool = True,
+                        use_cache: bool = True) -> IntegrationPlan:
+    """Compile a whole `Forest` into ONE IntegrationPlan.
+
+    Per-tree plans are never materialized: the batched flat-IT build decomposes
+    all trees in one level sweep, and `_assemble_plan` concatenates their cross
+    jobs and leaves into a single global index space (shared `src_gather` /
+    `src_seg` / `tgt_gather` / `tgt_scatter`, buckets merged across trees by
+    size class, grid_h reconciled over the merged distances). `execute_plan`
+    then runs the ENTIRE forest as the same handful of fused gather /
+    segment-sum / scatter ops — one jit dispatch for N graphs instead of N.
+
+    The packed field layout is `Forest`'s: vertex v of tree t at row
+    `forest.offsets[t] + v`; the multiply is block-diagonal by construction
+    (no index from one tree ever references another tree's rows)."""
+    from repro.core.itree_flat import build_flat_forest, tree_fingerprint
+
+    if use_cache:
+        key = ("forest", tuple(tree_fingerprint(t) for t in forest.trees),
+               max(int(leaf_size), 6), int(seed), detect_grid_spacing)
+        hit = _PLAN_CACHE.get(key)
+        if hit is not None:
+            return hit
+
+    flat = build_flat_forest(forest.trees, leaf_size=leaf_size, seed=seed,
+                             use_cache=use_cache)
+    plan = _assemble_plan(flat, forest.num_vertices, detect_grid_spacing)
     if use_cache:
         _PLAN_CACHE.put(key, plan)
     return plan

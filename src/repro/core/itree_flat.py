@@ -24,9 +24,18 @@ subtrees in one batch of numpy array passes over CSR adjacency —
      via batched binary lifting over the level's BFS forest — no per-leaf,
      per-source traversals.
 
-Results are cached per (tree content hash, leaf_size): repeated Integrator
-construction over the same topology (serving, benchmarks, ViT mask rebuilds)
-amortizes to a dict lookup.
+Because every level already batches an arbitrary number of independent
+subtrees, a whole FOREST of trees builds in the same sweep: `build_flat_forest`
+seeds level 0 with one subtree per tree (vertex ids offset into the packed
+forest layout) and ONE frontier loop decomposes all trees' levels together —
+90 small graphs cost the same handful of numpy passes as one graph.
+
+Results are cached per (content hash, leaf_size, seed) in one shared
+BoundedLRU for trees and forests: repeated Integrator construction over the
+same topology (serving, benchmarks, ViT mask rebuilds) amortizes to a dict
+lookup. `seed` must be part of the key even though the current builder is
+deterministic — a seeded builder variant must never alias differently-seeded
+builds to the first one built.
 """
 from __future__ import annotations
 
@@ -57,6 +66,9 @@ class FlatIT:
 
     `children[i]` holds two refs: >= 0 is an internal node index, < 0 is a
     leaf encoded as -(leaf_index + 1). `root_ref` uses the same encoding.
+    For forest builds, `root_refs[t]` is tree t's root in the same encoding
+    and all vertex ids are global (offset into the packed forest layout);
+    `root_ref` stays the first tree's root for single-tree compatibility.
     """
 
     n: int
@@ -70,6 +82,7 @@ class FlatIT:
     leaf_ids: list  # list[np.ndarray]
     leaf_dists: list  # list[np.ndarray (k,k)]
     leaf_depth: np.ndarray  # (L,)
+    root_refs: np.ndarray | None = None  # (K,) per-tree roots (forest builds)
 
     @property
     def num_internal(self) -> int:
@@ -105,16 +118,40 @@ def build_flat_it(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
                   use_cache: bool = True) -> FlatIT:
     """Build (or fetch from cache) the flat IT for `tree`.
 
-    `seed` is kept for API compatibility with the old recursive builder; the
-    construction is fully deterministic.
+    `seed` is kept for API compatibility with the old recursive builder (the
+    current construction is fully deterministic) but is still part of the
+    cache key: differently-seeded builds must never alias.
     """
     leaf_size = max(int(leaf_size), 6)
     if use_cache:
-        key = (tree_fingerprint(tree), leaf_size)
+        key = (tree_fingerprint(tree), leaf_size, int(seed))
         hit = _CACHE.get(key)
         if hit is not None:
             return hit
-    flat = _build(tree, leaf_size)
+    flat = _build([tree], leaf_size)
+    if use_cache:
+        _CACHE.put(key, flat)
+    return flat
+
+
+def build_flat_forest(trees, leaf_size: int = 64, seed: int = 0,
+                      use_cache: bool = True) -> FlatIT:
+    """Build (or fetch from cache) ONE flat IT covering every tree of a
+    forest: level 0 starts with one active subtree per tree (vertex ids
+    offset into the packed layout), so a single frontier loop decomposes all
+    trees' levels together. Shares the content-hash cache with
+    `build_flat_it` (keyed by the tuple of per-tree fingerprints)."""
+    trees = list(getattr(trees, "trees", trees))
+    if not trees:
+        raise ValueError("build_flat_forest needs at least one tree")
+    leaf_size = max(int(leaf_size), 6)
+    if use_cache:
+        key = (tuple(tree_fingerprint(t) for t in trees), leaf_size,
+               int(seed))
+        hit = _CACHE.get(key)
+        if hit is not None:
+            return hit
+    flat = _build(trees, leaf_size)
     if use_cache:
         _CACHE.put(key, flat)
     return flat
@@ -244,22 +281,29 @@ def _leaf_distance_matrices(sub_ptr, leaf_subs, parent, dep, droot, size, sub):
 # ----------------------------------------------------------------------------
 
 
-def _build(tree: WeightedTree, leaf_size: int) -> FlatIT:
-    n = tree.num_vertices
+def _build(trees: list, leaf_size: int) -> FlatIT:
+    # level 0 has one active subtree per tree; vertex ids are offsets into
+    # the packed forest layout (single trees are the K == 1 special case)
+    sizes0 = np.array([t.num_vertices for t in trees], np.int64)
+    offsets = np.zeros(sizes0.size + 1, np.int64)
+    np.cumsum(sizes0, out=offsets[1:])
+    n = int(offsets[-1])
     verts = np.arange(n, dtype=np.int64)
-    sub = np.zeros(n, np.int64)
-    eu = tree.edges_u.astype(np.int64)
-    ev = tree.edges_v.astype(np.int64)
-    ew = tree.weights.astype(np.float64)
-    num_sub = 1
-    pend_parent = np.array([-1], np.int64)
-    pend_side = np.array([0], np.int64)
+    sub = np.repeat(np.arange(sizes0.size, dtype=np.int64), sizes0)
+    eu = np.concatenate([t.edges_u.astype(np.int64) + offsets[i]
+                         for i, t in enumerate(trees)])
+    ev = np.concatenate([t.edges_v.astype(np.int64) + offsets[i]
+                         for i, t in enumerate(trees)])
+    ew = np.concatenate([t.weights.astype(np.float64) for t in trees])
+    num_sub = sizes0.size
+    pend_parent = np.full(num_sub, -1, np.int64)
+    pend_side = np.zeros(num_sub, np.int64)
     depth = 0
 
     pivots, node_depth, children = [], [], []
     lefts, rights = [], []
     leaf_ids, leaf_dists, leaf_depth = [], [], []
-    root_ref = None
+    root_refs = None
 
     while num_sub:
         S = verts.size
@@ -274,8 +318,8 @@ def _build(tree: WeightedTree, leaf_size: int) -> FlatIT:
         leaf_rank = np.cumsum(~split_mask) - (~split_mask)
         ref = np.where(split_mask, len(pivots) + int_rank,
                        -(len(leaf_ids) + leaf_rank) - 1)
-        if root_ref is None:
-            root_ref = int(ref[0])
+        if root_refs is None:
+            root_refs = ref.astype(np.int64).copy()  # level 0: tree roots
         for s in range(num_sub):
             if pend_parent[s] >= 0:
                 children[pend_parent[s]][pend_side[s]] = int(ref[s])
@@ -416,7 +460,7 @@ def _build(tree: WeightedTree, leaf_size: int) -> FlatIT:
         depth += 1
 
     return FlatIT(
-        n=n, leaf_size=leaf_size, root_ref=root_ref,
+        n=n, leaf_size=leaf_size, root_ref=int(root_refs[0]),
         pivots=np.asarray(pivots, np.int64),
         node_depth=np.asarray(node_depth, np.int64),
         children=(np.asarray(children, np.int64).reshape(-1, 2)
@@ -424,6 +468,7 @@ def _build(tree: WeightedTree, leaf_size: int) -> FlatIT:
         left=lefts, right=rights,
         leaf_ids=leaf_ids, leaf_dists=leaf_dists,
         leaf_depth=np.asarray(leaf_depth, np.int64),
+        root_refs=root_refs,
     )
 
 

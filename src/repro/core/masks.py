@@ -3,7 +3,9 @@
 The mask is M = [f(dist(i,j))] with f = g(sum_t a_t x^t) and (a_t) learnable —
 **3 extra scalars** per layer (synced) or per head (asynced). FastMult_M:
   - sequences (LM archs): Toeplitz FFT, exact for any f (core.toeplitz);
-  - grids/graphs (ViT):   IT-plan executor, exact engines (core.integrate).
+  - grids/graphs (ViT):   IT-plan executor, exact engines (core.integrate);
+  - many graphs at once:  make_forest_fastmult over a packed Forest — each
+    request's own mask applied block-diagonally in ONE fused dispatch.
 
 Decode: for separable f (g=exp & t<=1, or g=identity polynomial), the cross
 term f(i-j) = sum_r alpha_r(i) beta_r(j) splits, so masked linear attention
@@ -170,6 +172,34 @@ def make_tree_fastmult(integrator, g: str, coeffs,
             # weakly referenced: the purge above drops the entry (and the
             # plan/closure memory it pins) once the integrator dies
             _TREE_FM_CACHE.put(key, (fastmult, ref))
+    return fastmult
+
+
+def make_forest_fastmult(integrator, forest, g: str, coeffs,
+                         dist_scale: float = 1.0,
+                         tree_weights=None) -> Callable:
+    """Per-graph FastMult over a packed `Forest` field (..., sum_t n_t, c).
+
+    `integrator` is `Integrator.from_forest(forest, ...)`: its plan is
+    block-diagonal across trees, so ONE fused execution applies each graph's
+    own mask M_t = [f(dist_{T_t}(i,j))] to its own rows — per-request
+    topological masks under serving load ride a single jit dispatch instead
+    of a Python loop over requests.
+
+    `tree_weights` (K,) optionally broadcasts a per-tree coefficient onto
+    each tree's output block (the multiply is linear, so scaling the output
+    rows of tree t equals scaling its mask) — e.g. FRT-forest averaging
+    weights or per-request temperature. Shares the concrete-coeff memo with
+    `make_tree_fastmult`; traced coeffs bypass caching exactly as there."""
+    base = make_tree_fastmult(integrator, g, coeffs, dist_scale)
+    if tree_weights is None:
+        return base
+    w = jnp.asarray(forest.broadcast(
+        np.asarray(tree_weights, np.float32)))[:, None]  # (N, 1)
+
+    def fastmult(X):  # X: (..., N, c)
+        return base(X) * w
+
     return fastmult
 
 

@@ -1,5 +1,5 @@
 """Graph substrate: weighted graphs/trees, MST, traversals, mesh generators."""
-from repro.graphs.graph import Graph, WeightedTree  # noqa: F401
+from repro.graphs.graph import Forest, Graph, WeightedTree  # noqa: F401
 from repro.graphs.mst import minimum_spanning_tree  # noqa: F401
 from repro.graphs.traverse import (  # noqa: F401
     TreeLCA,

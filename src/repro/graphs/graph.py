@@ -80,6 +80,82 @@ class WeightedTree(Graph):
         return sub, vertex_ids
 
 
+class Forest:
+    """An ordered collection of `WeightedTree`s integrated as ONE unit.
+
+    The packed-field layout is the concatenation of the per-tree vertex
+    spaces: vertex v of tree t lives at global row `offsets[t] + v`, so a
+    packed field has shape (sum_t n_t, d) and a forest integration is a
+    block-diagonal multiply — every tree's M_f applied to its own rows, with
+    zero cross-tree coupling. `compile_forest_plan` (repro.core.integrate)
+    compiles the whole forest into one fused IntegrationPlan;
+    `Integrator.from_forest` is the public entry point.
+    """
+
+    def __init__(self, trees):
+        trees = list(trees)
+        if not trees:
+            raise ValueError("Forest needs at least one tree")
+        for t in trees:
+            if not isinstance(t, WeightedTree):
+                raise TypeError(
+                    f"Forest members must be WeightedTree, got {type(t).__name__}")
+        self.trees = trees
+        sizes = np.array([t.num_vertices for t in trees], dtype=np.int64)
+        self.offsets = np.zeros(sizes.size + 1, dtype=np.int64)
+        np.cumsum(sizes, out=self.offsets[1:])
+
+    @property
+    def num_trees(self) -> int:
+        return len(self.trees)
+
+    @property
+    def num_vertices(self) -> int:
+        """Total vertices across the forest (the packed-field length)."""
+        return int(self.offsets[-1])
+
+    @property
+    def tree_sizes(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+    def pack(self, fields) -> np.ndarray:
+        """Stack per-tree fields [(n_t, ...)] into one packed (N, ...) field."""
+        fields = [np.asarray(f) for f in fields]
+        if len(fields) != self.num_trees:
+            raise ValueError(
+                f"expected {self.num_trees} fields, got {len(fields)}")
+        for t, f in enumerate(fields):
+            if f.shape[0] != int(self.offsets[t + 1] - self.offsets[t]):
+                raise ValueError(
+                    f"field {t}: {f.shape[0]} rows != tree size "
+                    f"{int(self.offsets[t + 1] - self.offsets[t])}")
+        return np.concatenate(fields, axis=0)
+
+    def unpack(self, X) -> list:
+        """Split a packed (N, ...) array into per-tree views [(n_t, ...)]."""
+        X = np.asarray(X)
+        if X.shape[0] != self.num_vertices:
+            raise ValueError(
+                f"packed field has {X.shape[0]} rows, forest has "
+                f"{self.num_vertices} vertices")
+        return [X[self.offsets[t]:self.offsets[t + 1]]
+                for t in range(self.num_trees)]
+
+    def broadcast(self, per_tree) -> np.ndarray:
+        """Broadcast per-tree coefficients (K,) or (K, d) to per-vertex rows
+        (N,) / (N, d) of the packed layout — e.g. FRT averaging weights or
+        per-request mask scales applied to a packed field/output."""
+        per_tree = np.asarray(per_tree)
+        if per_tree.shape[0] != self.num_trees:
+            raise ValueError(
+                f"expected leading dim {self.num_trees}, got {per_tree.shape}")
+        return np.repeat(per_tree, self.tree_sizes, axis=0)
+
+    def __repr__(self):
+        return (f"Forest(num_trees={self.num_trees}, "
+                f"num_vertices={self.num_vertices})")
+
+
 # ----------------------------------------------------------------------------
 # Generators (procedural substitutes for the paper's datasets; see DESIGN §7)
 # ----------------------------------------------------------------------------

@@ -43,17 +43,6 @@ def build_grid_integrator(cfg, backend: str | None = None) -> Integrator:
     return integ
 
 
-def build_grid_plan(cfg, backend: str | None = None) -> Integrator:
-    """Deprecated: use build_grid_integrator. Returns an Integrator now, NOT
-    an IntegrationPlan — pass it to vit.forward, not to execute_plan."""
-    import warnings
-
-    warnings.warn(
-        "vit.build_grid_plan is deprecated and now returns an Integrator; "
-        "use vit.build_grid_integrator", DeprecationWarning, stacklevel=2)
-    return build_grid_integrator(cfg, backend=backend)
-
-
 def _vit_block_init(key, cfg, dtype):
     ks = jax.random.split(key, 4)
     return {

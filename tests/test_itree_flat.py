@@ -100,6 +100,31 @@ def test_flat_it_cache_and_fingerprint():
     assert build_flat_it(tree, leaf_size=16) is not f1
 
 
+def test_cache_keys_include_seed():
+    """Regression: differently-seeded builds must never alias to the first
+    build via the content-hash caches (the key used to omit `seed`)."""
+    tree = random_tree(90, seed=1)
+    clear_plan_cache()
+    clear_flat_cache()
+    p0 = compile_plan(tree, leaf_size=16, seed=0)
+    p1 = compile_plan(tree, leaf_size=16, seed=1)
+    assert p0 is not p1
+    assert compile_plan(tree, leaf_size=16, seed=0) is p0
+    assert compile_plan(tree, leaf_size=16, seed=1) is p1
+    f0 = build_flat_it(tree, leaf_size=16, seed=0)
+    f1 = build_flat_it(tree, leaf_size=16, seed=1)
+    assert f0 is not f1
+    assert build_flat_it(tree, leaf_size=16, seed=0) is f0
+    # forest builds carry the seed in their key too
+    from repro.core.itree_flat import build_flat_forest
+
+    trees = [tree, random_tree(40, seed=2)]
+    ff0 = build_flat_forest(trees, leaf_size=16, seed=0)
+    ff1 = build_flat_forest(trees, leaf_size=16, seed=1)
+    assert ff0 is not ff1
+    assert build_flat_forest(trees, leaf_size=16, seed=0) is ff0
+
+
 def test_plan_cache_amortizes_recompilation():
     tree = random_tree(150, seed=4)
     clear_plan_cache()
