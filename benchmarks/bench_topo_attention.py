@@ -25,6 +25,64 @@ from repro.core.engines import Integrator
 from repro.core.toeplitz import toeplitz_dense
 
 
+def impl_sweep(rng, quick=False):
+    """The cfg.topo_attn_impl axis on the sequence path -> JSON rows.
+
+    Default bench config: the TopoViT mask family (g=exp, degree 2 — the
+    general low-degree-polynomial path, i.e. the fft CHUNK-LOOP vs the fused
+    kernel), B=2, H=4, m=hd=64, causal. `fft` is the exact Toeplitz-FFT
+    column-chunk path; `pallas` is the fused kernels/topo_linear_attention
+    step (compiled Pallas on TPU, its XLA chunked-scan twin elsewhere —
+    measured steady-state after jit warmup). rel_err is vs the dense ref
+    oracle where it fits, vs the exact fft path at large L.
+    """
+    import types
+
+    import jax.numpy as jnp
+
+    from repro.kernels.topo_linear_attention.ops import topo_linear_attention
+    from repro.kernels.topo_linear_attention.ref import (
+        topo_linear_attention_ref)
+    from repro.models.attention import _topo_fft_attention
+
+    B, H, m, hd = 2, 4, 64, 64
+    g, degree = "exp", 2
+    rows = []
+    for L in (512, 1024) if quick else (512, 4096):
+        s = 1.0 / L
+        cfg = types.SimpleNamespace(topo_g=g, topo_dist_scale=s)
+        cs = jnp.asarray([[0.0, -0.5, -0.25]] * H, jnp.float32)
+        qf = jnp.asarray(np.abs(rng.normal(size=(B, L, H, m))), jnp.float32)
+        kf = jnp.asarray(np.abs(rng.normal(size=(B, L, H, m))), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, L, H, hd)), jnp.float32)
+        qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (qf, kf, v))
+        fft_fn = jax.jit(
+            lambda q, k, w: _topo_fft_attention(cfg, q, k, w, cs, True))
+        fused_fn = jax.jit(
+            lambda q, k, w: topo_linear_attention(
+                q, k, w, cs, g=g, dist_scale=s, causal=True))
+        out_fft = jax.block_until_ready(fft_fn(qf, kf, v)).transpose(0, 2, 1, 3)
+        out_fused = jax.block_until_ready(fused_fn(qt, kt, vt))
+        if L <= 512:
+            anchor = topo_linear_attention_ref(qt, kt, vt, cs, g=g,
+                                               dist_scale=s, causal=True)
+        else:
+            anchor = out_fft  # the fft path is exact at any L
+        nrm = float(jnp.max(jnp.abs(anchor)))
+        t_fft = timeit(lambda: jax.block_until_ready(fft_fn(qf, kf, v)))
+        t_fused = timeit(lambda: jax.block_until_ready(fused_fn(qt, kt, vt)))
+        for impl, t, out in (("fft", t_fft, out_fft),
+                             ("pallas", t_fused, out_fused)):
+            err = float(jnp.max(jnp.abs(out - anchor))) / nrm
+            rows.append({"case": "seq_topo", "L": L, "impl": impl,
+                         "g": g, "degree": degree, "causal": True,
+                         "t_s": t, "rel_err": err,
+                         "speedup_vs_fft": t_fft / t})
+            emit(f"tab1/impl/L{L}/{impl}", t,
+                 f"rel_err={err:.2e} speedup_vs_fft={t_fft/t:.2f}x")
+    return rows
+
+
 def exactness(rng):
     L, d, m = 128, 16, 8
     qf = jnp.asarray(np.abs(rng.normal(size=(2, L, m))), jnp.float32)
@@ -94,20 +152,24 @@ def tree_attention(rng, backends=("plan",), side=8):
              f"maxerr={err:.2e} engine={engine}")
 
 
-def run(backends=("plan",)):
+def run(backends=("plan",), quick=False):
+    """Returns the impl-sweep rows (written to BENCH_topo_attention.json by
+    benchmarks.run) after the exactness/scaling/tree sections print."""
     rng = np.random.default_rng(0)
     exactness(rng)
     scaling(rng)
     tree_attention(rng, backends=backends)
+    return impl_sweep(rng, quick=quick)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default="plan",
                     help="comma list of plan,pallas (tree-mask section)")
+    ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(backends=tuple(args.backend.split(",")))
+    run(backends=tuple(args.backend.split(",")), quick=args.quick)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,7 @@
-"""CI smoke gate over BENCH_ftfi_runtime.json + IT-build wall clock + the
-fused forest plan.
+"""CI smoke gate over the benchmark JSON artifacts.
 
-Fails (exit 1) when:
+--suite ftfi (default) gates BENCH_ftfi_runtime.json + IT-build wall clock +
+the fused forest plan. Fails (exit 1) when:
   * any exact-engine row reports rel_err > --max-rel-err (default 1e-4) —
     chebyshev rows are approximate by design and only get a loose sanity
     bound;
@@ -12,7 +12,12 @@ Fails (exit 1) when:
   * the fused forest plan diverges from the per-tree host loop by more than
     --forest-rel-err (default 1e-5) on a small mixed-size forest.
 
+--suite topo gates BENCH_topo_attention.json: every topo_attn_impl row must
+stay within --topo-rel-err (default 1e-3) of its exactness anchor, and the
+fused impl must not be slower than the fft chunk-loop path it replaces.
+
   PYTHONPATH=src python -m benchmarks.check_bench BENCH_ftfi_runtime.json
+  PYTHONPATH=src python -m benchmarks.check_bench --suite topo BENCH_topo_attention.json
 """
 from __future__ import annotations
 
@@ -104,18 +109,43 @@ def check_forest(max_rel_err: float) -> list[str]:
     return errors
 
 
+def check_topo_json(path: str, max_rel_err: float) -> list[str]:
+    """Topo-attention impl parity gate: every impl row within max_rel_err of
+    its anchor, and the fused impl at least as fast as the fft chunk-loop."""
+    with open(path) as fh:
+        rows = json.load(fh)["rows"]
+    errors = []
+    if not rows:
+        errors.append(f"{path}: no benchmark rows")
+    for r in rows:
+        if r["rel_err"] > max_rel_err:
+            errors.append(
+                f"{r['case']}/L{r['L']}/{r['impl']}: rel_err "
+                f"{r['rel_err']:.2e} > {max_rel_err:.0e}")
+        if r["impl"] == "pallas" and r["speedup_vs_fft"] < 1.0:
+            errors.append(
+                f"{r['case']}/L{r['L']}/pallas: fused path slower than the "
+                f"fft chunk-loop ({r['speedup_vs_fft']:.2f}x)")
+    return errors
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("json", nargs="?", default="BENCH_ftfi_runtime.json")
+    ap.add_argument("--suite", choices=("ftfi", "topo"), default="ftfi")
     ap.add_argument("--max-rel-err", type=float, default=1e-4)
     ap.add_argument("--it-n", type=int, default=2000)
     ap.add_argument("--it-ceiling", type=float, default=5.0)
     ap.add_argument("--forest-rel-err", type=float, default=1e-5)
+    ap.add_argument("--topo-rel-err", type=float, default=1e-3)
     args = ap.parse_args()
 
-    errors = check_json(args.json, args.max_rel_err)
-    errors += check_it_build(args.it_n, args.it_ceiling)
-    errors += check_forest(args.forest_rel_err)
+    if args.suite == "topo":
+        errors = check_topo_json(args.json, args.topo_rel_err)
+    else:
+        errors = check_json(args.json, args.max_rel_err)
+        errors += check_it_build(args.it_n, args.it_ceiling)
+        errors += check_forest(args.forest_rel_err)
     if errors:
         for e in errors:
             print(f"GATE FAIL: {e}", file=sys.stderr)

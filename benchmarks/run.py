@@ -1,7 +1,8 @@
 """Benchmark harness: one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV lines; the fig3 suite additionally
-writes BENCH_ftfi_runtime.json and the fig5 suite writes
-BENCH_graph_classification.json so the perf trajectory accumulates across PRs.
+writes BENCH_ftfi_runtime.json, the fig5 suite writes
+BENCH_graph_classification.json and the tab1 suite writes
+BENCH_topo_attention.json so the perf trajectory accumulates across PRs.
 
   python -m benchmarks.run [--quick] [--only fig3,fig4,...]
           [--backend host,plan,pallas] [--baseline prev_BENCH.json]
@@ -79,7 +80,8 @@ def main() -> None:
             repeat=3 if args.quick else 6),
         "fig6": lambda: bench_learnable_f.run(steps=150 if args.quick else 300),
         "tab1": lambda: bench_topo_attention.run(
-            backends=tuple(b for b in backends if b != "host") or ("plan",)),
+            backends=tuple(b for b in backends if b != "host") or ("plan",),
+            quick=args.quick),
         "fig10": lambda: bench_gw.run(n=800 if args.quick else 5000),
         "roofline": lambda: bench_roofline.run(),
     }
@@ -100,6 +102,9 @@ def main() -> None:
             elif name == "fig5":
                 with open("BENCH_graph_classification.json", "w") as fh:
                     json.dump({"suite": "fig5", "rows": result}, fh, indent=1)
+            elif name == "tab1":
+                with open("BENCH_topo_attention.json", "w") as fh:
+                    json.dump({"suite": "tab1", "rows": result}, fh, indent=1)
         except Exception:
             traceback.print_exc()
             failed.append(name)

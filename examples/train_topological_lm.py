@@ -16,12 +16,14 @@ from repro.optim.adamw import AdamWConfig
 from repro.train.loop import TrainLoopConfig, run_training
 
 
-def small_lm(variant: str, seq_len: int) -> ModelConfig:
+def small_lm(variant: str, seq_len: int, topo_impl: str = "fft",
+             topo_degree: int = 1) -> ModelConfig:
     return ModelConfig(
         name=f"lm-{variant}", family="dense", num_layers=4, d_model=256,
         num_heads=4, num_kv_heads=4, head_dim=64, d_ff=1024, vocab_size=512,
         attention_variant=variant, performer_phi="relu", topo_g="exp",
-        topo_degree=1, topo_synced=True, topo_dist_scale=1.0 / seq_len,
+        topo_degree=topo_degree, topo_synced=True,
+        topo_dist_scale=1.0 / seq_len, topo_attn_impl=topo_impl,
         dtype="float32", tie_embeddings=True)
 
 
@@ -30,11 +32,18 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--topo-impl", default="fft",
+                    choices=("ref", "fft", "pallas"),
+                    help="sequence-mask impl for the topo variant "
+                         "(cfg.topo_attn_impl)")
+    ap.add_argument("--topo-degree", type=int, default=1,
+                    help="mask polynomial degree (2+ exercises the general "
+                         "non-separable path)")
     args = ap.parse_args()
 
     results = {}
     for variant in ("performer", "topo"):
-        cfg = small_lm(variant, args.seq)
+        cfg = small_lm(variant, args.seq, args.topo_impl, args.topo_degree)
         loop = TrainLoopConfig(
             steps=args.steps, batch_size=args.batch, seq_len=args.seq,
             ckpt_dir=f"/tmp/topolm_{variant}", ckpt_every=args.steps,

@@ -31,6 +31,12 @@ class ModelConfig:
     topo_degree: int = 1  # t: #poly coeffs - 1; (t+1)+1(scale)=3 params synced
     topo_synced: bool = True
     topo_dist_scale: float = 1.0 / 256.0
+    # sequence-mask attention impl: ref (dense O(L^2) oracle) | fft
+    # (separable scan / Toeplitz-FFT column chunks) | pallas (fused kernel)
+    topo_attn_impl: str = "fft"
+    # tree/grid Integrator backend override for the ViT path (None: follow
+    # topo_attn_impl — pallas -> pallas, else plan)
+    topo_backend: Optional[str] = None
 
     # mlp
     mlp_act: str = "silu"  # silu (SwiGLU) | gelu (GeGLU)

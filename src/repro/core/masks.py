@@ -62,6 +62,69 @@ def sequence_mask_values(g: str, coeffs, L: int, dist_scale: float = 1.0):
     return GS[g](z)
 
 
+def chebyshev_nodes(L: int, rank: int):
+    """Chebyshev nodes on [0, L] (numpy, static)."""
+    kk = np.arange(rank)
+    t = np.cos((2 * kk + 1) * np.pi / (2 * rank))
+    return ((L / 2.0) + (L / 2.0) * t).astype(np.float32)  # (rank,)
+
+
+def _poly_mask_eval(g: str, coeffs, zs):
+    """f = g(poly(coeffs)) evaluated on a 2-trailing-dim grid `zs` (already
+    dist-scaled); coeffs (..., t+1) broadcasts its leading (head) dims."""
+    c = jnp.asarray(coeffs, jnp.float32)
+    acc = jnp.zeros(c.shape[:-1] + zs.shape, jnp.float32)
+    for t in range(c.shape[-1] - 1, -1, -1):
+        acc = acc * zs + c[..., t][..., None, None]
+    return GS[g](acc)
+
+
+def chebyshev_separable_expansion(g: str, coeffs, L: int,
+                                  dist_scale: float = 1.0, rank: int = 16):
+    """Node grid + node-pair mask values of the rank-R Chebyshev expansion
+    of (i, j) -> f(i - j) on [0, L)^2. Shared by the table builder below and
+    the O(1)-state decode (attention.topo_decomposition), so train/prefill
+    and decode use ONE expansion. Returns (nodes (rank,) np, Bmat
+    (..., rank, rank) differentiable in coeffs)."""
+    nodes = chebyshev_nodes(L, rank)
+    zs = jnp.asarray(nodes[:, None] - nodes[None, :]) * dist_scale  # (r, r)
+    return nodes, _poly_mask_eval(g, coeffs, zs)
+
+
+def chebyshev_separable_tables(g: str, coeffs, L: int, dist_scale: float = 1.0,
+                               rank: int = 16):
+    """Rank-R separable expansion of the sequence mask, tabulated per position:
+
+        f(i - j) ~= sum_r alpha[..., i, r] * beta[..., j, r]
+
+    for i, j in [0, L) via 2-D Chebyshev interpolation of (i, j) -> f(i - j)
+    (spectral accuracy for the paper's smooth g(poly) masks). `coeffs` carries
+    leading head dims (H, t+1) and the tables are differentiable in it — this
+    is what lets the fused attention kernels train the 3 mask scalars.
+
+    Returns (alpha (..., L, rank), beta (..., L, rank))."""
+    nodes, Bmat = chebyshev_separable_expansion(g, coeffs, L, dist_scale, rank)
+    from repro.core.engines.plan import _lagrange_batched
+    pos = np.arange(L, dtype=np.float32)
+    Lg = _lagrange_batched(pos[None, :], nodes[None, :])[0]  # (L, r)
+    Lg = jnp.asarray(Lg, jnp.float32)
+    alpha = jnp.einsum("lq,...qr->...lr", Lg, Bmat)
+    beta = jnp.broadcast_to(Lg, Bmat.shape[:-2] + Lg.shape)
+    return alpha, beta
+
+
+def sequence_mask_matrix(g: str, coeffs, C: int, dist_scale: float = 1.0,
+                         strict: bool = False):
+    """Lower-triangular (..., C, C) tile of the causal sequence mask:
+    f(i - j) where i > j (>= unless `strict`), zero above the diagonal.
+    This is the exact within-chunk mask the fused attention kernels apply;
+    differentiable in `coeffs` (leading head dims broadcast)."""
+    d = np.arange(C)[:, None] - np.arange(C)[None, :]
+    vals = _poly_mask_eval(g, coeffs, jnp.asarray(d, jnp.float32) * dist_scale)
+    keep = jnp.asarray(d > 0 if strict else d >= 0)
+    return jnp.where(keep, vals, 0.0)
+
+
 # ----------------------------------------------------------------------------
 # Algorithm 1 (App. C): general efficient low-rank masked attention
 # ----------------------------------------------------------------------------

@@ -1,0 +1,2 @@
+from repro.kernels.topo_linear_attention.ops import topo_linear_attention  # noqa: F401
+from repro.kernels.topo_linear_attention.ref import topo_linear_attention_ref  # noqa: F401

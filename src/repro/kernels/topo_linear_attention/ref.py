@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for topological masked linear attention (Alg. 1).
+
+Materializes the full (H, L, L) sequence mask M = [f(dist(i, j))] and runs the
+O(L^2) masked quadratic — exact for any g/degree, causal or bidirectional.
+This is the parity standard every other impl (fft chunk-loop, fused
+pallas/XLA) is tested against.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masks import _poly_mask_eval
+
+
+def sequence_topo_mask(g: str, coeffs, L: int, dist_scale: float = 1.0,
+                       causal: bool = True):
+    """Dense (..., L, L) mask f(i-j) (causal, zero above diagonal) or
+    f(|i-j|) (bidirectional). coeffs: (..., t+1)."""
+    idx = np.arange(L)
+    d = idx[:, None] - idx[None, :]
+    dist = d if causal else np.abs(d)
+    vals = _poly_mask_eval(g, coeffs,
+                           jnp.asarray(dist, jnp.float32) * dist_scale)
+    if causal:
+        vals = jnp.where(jnp.asarray(d >= 0), vals, 0.0)
+    return vals
+
+
+def topo_linear_attention_ref(qf, kf, v, coeffs, *, g: str = "exp",
+                              dist_scale: float = 1.0, causal: bool = True,
+                              eps: float = 1e-6):
+    """qf/kf: (B, H, L, m) nonneg features; v: (B, H, L, hd);
+    coeffs: (H, t+1) effective (post-constraint) mask coefficients.
+    Returns the normalized attention output (B, H, L, hd) in float32."""
+    L = qf.shape[-2]
+    M = sequence_topo_mask(g, coeffs, L, dist_scale, causal)  # (H, L, L)
+    scores = jnp.einsum("bhim,bhjm->bhij", qf.astype(jnp.float32),
+                        kf.astype(jnp.float32)) * M[None]
+    num = jnp.einsum("bhij,bhjd->bhid", scores, v.astype(jnp.float32))
+    den = jnp.sum(scores, axis=-1)
+    den = jnp.where(jnp.abs(den) < eps, eps, den)
+    return num / den[..., None]

@@ -437,17 +437,52 @@ def topo_mask_coeffs(cfg, p_topo):
     return jnp.stack(out, axis=1)  # (H, t+1)
 
 
+def topo_logit_scale(cfg, p_topo):
+    """Per-head feature temperature e^{logit_scale} — the remaining learnable
+    mask scalar. Applied to q BEFORE phi (a post-phi score scale would cancel
+    exactly in the num/den normalization); identity at init (logit_scale=0)."""
+    ls = p_topo["logit_scale"].astype(jnp.float32)
+    return jnp.broadcast_to(jnp.exp(ls), (cfg.num_heads,))
+
+
 def topo_attention_train(cfg, p, p_topo, x, positions, causal=True):
-    """Masked linear attention (Alg. 1) with the sequence topological mask."""
+    """Masked linear attention (Alg. 1) with the sequence topological mask.
+
+    Impl dispatch (cfg.topo_attn_impl):
+      ref    — dense (L, L) mask oracle, O(L^2) (tests/tiny L);
+      fft    — separable-decay chunked scan (g=exp, deg<=1) or the
+               Toeplitz-FFT Algorithm-1 path chunked over feature columns;
+      pallas — fused kernels/topo_linear_attention step (Pallas on TPU, its
+               XLA chunked-scan twin elsewhere).
+    """
     B, L, _ = x.shape
     q, k, v = _project_qkv(cfg, p, x, positions, rope=False)
     k, v = _expand_kv(cfg, k, v)
-    qf = phi_features(q, cfg.performer_phi)
+    scale = topo_logit_scale(cfg, p_topo)  # (H,)
+    qf = phi_features(q * scale[None, None, :, None], cfg.performer_phi)
     kf = phi_features(k, cfg.performer_phi)
     coeffs = topo_mask_coeffs(cfg, p_topo)  # (H, t+1)
     s = cfg.topo_dist_scale
-    if cfg.topo_g == "exp" and cfg.topo_degree <= 1:
-        # separable: mask = gamma^(i-j); a0 cancels in the normalization
+    impl = getattr(cfg, "topo_attn_impl", "fft")
+    if impl not in ("ref", "fft", "pallas"):
+        raise ValueError(f"cfg.topo_attn_impl={impl!r}: expected one of "
+                         "'ref', 'fft', 'pallas'")
+    if impl in ("pallas", "ref"):
+        if impl == "pallas":
+            from repro.kernels.topo_linear_attention.ops import (
+                topo_linear_attention as fn)
+        else:
+            from repro.kernels.topo_linear_attention.ref import (
+                topo_linear_attention_ref as fn)
+        out = fn(qf.transpose(0, 2, 1, 3), kf.transpose(0, 2, 1, 3),
+                 v.transpose(0, 2, 1, 3).astype(jnp.float32), coeffs,
+                 g=cfg.topo_g, dist_scale=s,
+                 causal=causal).transpose(0, 2, 1, 3)
+    elif cfg.topo_g == "exp" and cfg.topo_degree <= 1:
+        # separable: mask = e^{a0} gamma^(i-j). The e^{a0} factor cancels in
+        # the normalization EXCEPT where the eps denominator clamp binds —
+        # fold it into kf so num/den match the other impls bit-for-bit there
+        kf = kf * jnp.exp(coeffs[:, 0])[None, None, :, None]
         log_gamma = coeffs[:, 1] * s if coeffs.shape[1] > 1 else jnp.zeros(cfg.num_heads)
         if causal:
             num, den = causal_linear_attention(qf, kf, v, log_gamma)
@@ -478,6 +513,10 @@ def _topo_fft_attention(cfg, qf, kf, v, coeffs, causal, col_chunk=8):
     """Algorithm 1 with Toeplitz-FFT FastMult, chunked over feature columns.
 
     Exact for any g/degree; memory O(B L H chunk*hd) instead of O(B L H m hd).
+    Accumulation is float32 end-to-end: inputs are upcast once, the single
+    `num` accumulator is allocated once in fp32, and the denominator needs no
+    column chunking at all — one fastmult over the m feature columns (only
+    the k⊗v expansion is chunked, since that is what blows up memory).
     """
     from repro.core.masks import sequence_mask_values
 
@@ -486,10 +525,11 @@ def _topo_fft_attention(cfg, qf, kf, v, coeffs, causal, col_chunk=8):
     from repro.core.toeplitz import causal_toeplitz_matvec, symmetric_toeplitz_matvec
     F = sequence_mask_values(cfg.topo_g, coeffs, L, cfg.topo_dist_scale)  # (H, L)
     fastmult = causal_toeplitz_matvec if causal else symmetric_toeplitz_matvec
-    Fb = F.transpose(0, 1)[None]  # (1,H,L)
-    num = jnp.zeros((B, L, H, hd), jnp.float32)
-    den = jnp.zeros((B, L, H), jnp.float32)
+    Fb = F[None]  # (1,H,L)
     qf32, kf32, v32 = (t.astype(jnp.float32) for t in (qf, kf, v))
+    d2 = fastmult(Fb, kf32.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    den = jnp.einsum("blhm,blhm->blh", qf32, d2)
+    num = jnp.zeros((B, L, H, hd), jnp.float32)
     for c0 in range(0, m, col_chunk):
         c1 = min(c0 + col_chunk, m)
         kc = kf32[..., c0:c1]  # (B,L,H,c)
@@ -497,8 +537,8 @@ def _topo_fft_attention(cfg, qf, kf, v, coeffs, causal, col_chunk=8):
         v1 = v1.reshape(B, L, H, -1).transpose(0, 2, 1, 3)  # (B,H,L,c*hd)
         d1 = fastmult(Fb, v1).transpose(0, 2, 1, 3).reshape(B, L, H, c1 - c0, hd)
         num = num + jnp.einsum("blhc,blhcv->blhv", qf32[..., c0:c1], d1)
-        d2 = fastmult(Fb, kc.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
-        den = den + jnp.einsum("blhc,blhc->blh", qf32[..., c0:c1], d2)
+    assert num.dtype == jnp.float32 and den.dtype == jnp.float32, (
+        "topo fft accumulators must stay fp32")
     return linear_attention_output(num, den)
 
 
@@ -508,11 +548,16 @@ def _topo_fft_attention(cfg, qf, kf, v, coeffs, causal, col_chunk=8):
 def topo_decomposition(cfg, coeffs, L: int, rank: int = 24):
     """f(i-j) = sum_r alpha_r(i) beta_r(j) for i,j in [0,L).
 
-    Exact rank-1 for g=exp,t<=1; otherwise Chebyshev rank-`rank` expansion of
-    (i,j) -> f(i-j) on [0,L)^2 (spectral accuracy for smooth f).
+    Exact rank-1 for g=exp,t<=1; otherwise the Chebyshev rank-`rank`
+    expansion of (i,j) -> f(i-j) on [0,L)^2 (spectral accuracy for smooth f)
+    shared with the fused attention kernel
+    (core.masks.chebyshev_separable_expansion) — decode states and the fused
+    train/prefill path are built from the SAME node grid and Bmat, but decode
+    Lagrange-evaluates only the single queried position (O(1) per token, not
+    an O(L) table rebuild per step).
     Returns (alpha(pos)->(H,R), beta(pos)->(H,R)).
     """
-    from repro.core.masks import GS
+    from repro.core.masks import chebyshev_separable_expansion
 
     s = cfg.topo_dist_scale
     H = coeffs.shape[0]
@@ -526,34 +571,21 @@ def topo_decomposition(cfg, coeffs, L: int, rank: int = 24):
             return jnp.exp(-a1 * s * pos)[..., None]
 
         return alpha, beta, 1
-    # Chebyshev nodes on [0, L]
-    r = rank
-    kk = np.arange(r)
-    t_nodes = np.cos((2 * kk + 1) * np.pi / (2 * r))
-    nodes = jnp.asarray((L / 2.0) + (L / 2.0) * t_nodes, jnp.float32)  # (r,)
+    nodes, Bmat = chebyshev_separable_expansion(cfg.topo_g, coeffs, L, s, rank)
+    nodes = jnp.asarray(nodes)
 
-    def f_eval(z):  # z: distances (may be negative); (H,...) broadcast
-        acc = jnp.zeros(coeffs.shape[:1] + z.shape, jnp.float32)
-        zs = z * s
-        for tt in range(coeffs.shape[1] - 1, -1, -1):
-            acc = acc * zs + coeffs[:, tt][:, None, None]
-        return GS[cfg.topo_g](acc)
-
-    Bmat = f_eval(nodes[:, None] - nodes[None, :])  # (H, r, r)
-
-    def lagr(pos):  # pos: () -> (r,)
+    def lagr(pos):  # pos: () -> (rank,)
         from repro.core.engines.plan import _lagrange_batched
         pts = jnp.reshape(jnp.asarray(pos, jnp.float32), (1, 1))
-        return _lagrange_batched(pts, nodes[None, :])[0, 0]  # (r,)
+        return _lagrange_batched(pts, nodes[None, :])[0, 0]
 
     def alpha(pos):
-        lx = lagr(pos)  # (r,)
-        return jnp.einsum("r,hrq->hq", lx, Bmat)  # (H, r)
+        return jnp.einsum("r,hrq->hq", lagr(pos), Bmat)  # (H, rank)
 
     def beta(pos):
-        return jnp.broadcast_to(lagr(pos)[None], (H, r))
+        return jnp.broadcast_to(lagr(pos)[None], (H, rank))
 
-    return alpha, beta, r
+    return alpha, beta, rank
 
 
 def topo_decode_init(cfg, B, L, dtype=jnp.float32, rank: int = 24):
@@ -573,7 +605,8 @@ def topo_attention_decode(cfg, p, p_topo, x, pos, cache, L: int, rank: int = 24)
     positions = jnp.full((B, 1), pos, jnp.int32)
     q, k, v = _project_qkv(cfg, p, x, positions, rope=False)
     k, v = _expand_kv(cfg, k, v)
-    qf = phi_features(q[:, 0], cfg.performer_phi)  # (B,H,m)
+    scale = topo_logit_scale(cfg, p_topo)  # (H,)
+    qf = phi_features(q[:, 0] * scale[None, :, None], cfg.performer_phi)
     kf = phi_features(k[:, 0], cfg.performer_phi)
     coeffs = topo_mask_coeffs(cfg, p_topo)
     alpha, beta, R = topo_decomposition(cfg, coeffs, L, rank)

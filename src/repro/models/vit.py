@@ -21,6 +21,7 @@ from repro.models.layers import dense_init, dtype_of, gated_mlp, gated_mlp_init,
 from repro.core.lru import BoundedLRU
 
 _GRID_INTEGRATOR_CACHE = BoundedLRU(8)
+_GRID_DIST_CACHE = BoundedLRU(4)
 
 
 def build_grid_integrator(cfg, backend: str | None = None) -> Integrator:
@@ -28,12 +29,18 @@ def build_grid_integrator(cfg, backend: str | None = None) -> Integrator:
     a unit-weight grid graph is grid-aligned (grid_h == 1), so general mask
     functions ride the exact Hankel/FFT cross engine automatically.
 
+    Backend resolution follows the topo impl axis: explicit `backend` arg >
+    cfg.topo_backend > cfg.topo_attn_impl ("pallas" -> the fused fdist_matvec
+    executor backend, anything else -> "plan").
+
     Memoized per (grid side, backend): repeated mask rebuilds return the same
     Integrator, so its plan and compiled fastmult closures are reused (the
     underlying IT/plan construction is additionally content-hash cached)."""
     side = int(round(np.sqrt(cfg.num_prefix_embeddings)))
     assert side * side == cfg.num_prefix_embeddings
-    backend = backend or getattr(cfg, "topo_backend", "plan")
+    backend = (backend or getattr(cfg, "topo_backend", None)
+               or ("pallas" if getattr(cfg, "topo_attn_impl", "fft") == "pallas"
+                   else "plan"))
     key = (side, backend)
     integ = _GRID_INTEGRATOR_CACHE.get(key)
     if integ is None:
@@ -41,6 +48,17 @@ def build_grid_integrator(cfg, backend: str | None = None) -> Integrator:
         integ = Integrator(mst, backend=backend, leaf_size=16)
         _GRID_INTEGRATOR_CACHE.put(key, integ)
     return integ
+
+
+def _grid_tree_distances(side: int):
+    """Dense (L, L) MST path-distance matrix for the ref impl (tests/tiny L)."""
+    D = _GRID_DIST_CACHE.get(side)
+    if D is None:
+        from repro.graphs.traverse import tree_all_pairs
+        D = np.asarray(tree_all_pairs(
+            minimum_spanning_tree(grid_graph(side, side))), np.float32)
+        _GRID_DIST_CACHE.put(side, D)
+    return D
 
 
 def _vit_block_init(key, cfg, dtype):
@@ -75,19 +93,31 @@ def init_params(cfg, key, num_classes: int = 1000, patch_dim: int = 768):
 
 
 def topo_vit_attention(cfg, p, p_topo, x, integ):
+    """Grid-MST masked linear attention. The cfg.topo_attn_impl axis rides
+    through here too: `ref` materializes the dense tree mask (oracle), any
+    other impl runs Algorithm 1 with the IT-plan FastMult — whose executor
+    backend (plan vs fused pallas fdist_matvec) was picked when `integ` was
+    built (build_grid_integrator)."""
     B, L, _ = x.shape
     q, k, v = A._project_qkv(cfg, p["attn"], x,
                              jnp.zeros((B, L), jnp.int32), rope=False)
-    qf = A.phi_features(q, cfg.performer_phi)
+    scale = A.topo_logit_scale(cfg, p_topo)  # (H,)
+    qf = A.phi_features(q * scale[None, None, :, None], cfg.performer_phi)
     kf = A.phi_features(k, cfg.performer_phi)
     coeffs = A.topo_mask_coeffs(cfg, p_topo)[0]  # synced: same across heads
-    fastmult = make_tree_fastmult(integ, cfg.topo_g, coeffs,
-                                  cfg.topo_dist_scale)
     # (B,L,H,m) -> heads folded into batch for Alg. 1
     qf_ = qf.transpose(0, 2, 1, 3)
     kf_ = kf.transpose(0, 2, 1, 3)
     v_ = v.transpose(0, 2, 1, 3).astype(jnp.float32)
-    out = masked_linear_attention(qf_, kf_, v_, fastmult)
+    if getattr(cfg, "topo_attn_impl", "fft") == "ref":
+        from repro.core.masks import mask_f, masked_attention_bruteforce
+        D = jnp.asarray(_grid_tree_distances(int(round(np.sqrt(L)))))
+        out = masked_attention_bruteforce(
+            qf_, kf_, v_, mask_f(cfg.topo_g, coeffs, cfg.topo_dist_scale)(D))
+    else:
+        fastmult = make_tree_fastmult(integ, cfg.topo_g, coeffs,
+                                      cfg.topo_dist_scale)
+        out = masked_linear_attention(qf_, kf_, v_, fastmult)
     out = out.transpose(0, 2, 1, 3).reshape(B, L, -1).astype(x.dtype)
     return out @ p["attn"]["wo"]
 

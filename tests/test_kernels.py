@@ -94,6 +94,97 @@ def test_linear_attention(L, m, hd, chunk, lg, rng):
     assert float(jnp.max(jnp.abs(den - rden))) / float(jnp.max(jnp.abs(rden))) < 1e-5
 
 
+# ----------------------------------------------------------------------------
+# shared ref-vs-ops parity fixture: every kernel family (including future
+# ones added to _KERNEL_FAMILY_CASES) gets ops-layer parity coverage for free
+# ----------------------------------------------------------------------------
+
+
+def _case_fdist_matvec(rng):
+    from repro.kernels.fdist_matvec.ops import fdist_matvec
+    from repro.kernels.fdist_matvec.ref import fdist_matvec_ref
+
+    x = jnp.asarray(rng.uniform(0, 3, 120), jnp.float32)
+    y = jnp.asarray(rng.uniform(0, 3, 75), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(75, 6)), jnp.float32)
+    cs = jnp.asarray([0.4, -0.3, 0.1], jnp.float32)
+    return {"out": (fdist_matvec(x, y, v, cs, mode="poly", blk_a=32, blk_b=32),
+                    fdist_matvec_ref(x, y, v, cs, "poly"))}
+
+
+def _case_flash_attention(rng):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    q, k, v = (jnp.asarray(rng.normal(size=(1, 2, 64, 16)), jnp.float32)
+               for _ in range(3))
+    return {"out": (flash_attention(q, k, v, causal=True),
+                    attention_ref(q, k, v, causal=True))}
+
+
+def _case_linear_attention(rng):
+    from repro.kernels.linear_attention.ops import linear_attention
+
+    qf = jnp.asarray(np.abs(rng.normal(size=(1, 2, 64, 8))), jnp.float32)
+    kf = jnp.asarray(np.abs(rng.normal(size=(1, 2, 64, 8))), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 64, 8)), jnp.float32)
+    lg = jnp.asarray([-0.04, 0.0], jnp.float32)
+    num, den = linear_attention(qf, kf, v, lg, chunk=16)
+    rnum, rden = linear_attention_ref(qf, kf, v, lg)
+    return {"num": (num, rnum), "den": (den, rden)}
+
+
+def _case_selective_scan(rng):
+    from repro.kernels.selective_scan.ops import selective_scan
+    from repro.kernels.selective_scan.ref import selective_scan_ref
+
+    u = jnp.asarray(rng.normal(size=(1, 64, 16)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(1, 64, 16))) * 0.1, jnp.float32)
+    A = jnp.asarray(-np.abs(rng.normal(size=(16, 8))) - 0.1, jnp.float32)
+    B = jnp.asarray(rng.normal(size=(1, 64, 8)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(1, 64, 8)), jnp.float32)
+    D = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+    return {"out": (selective_scan(u, dt, A, B, Cm, D, chunk=16, blk_d=16),
+                    selective_scan_ref(u, dt, A, B, Cm, D))}
+
+
+def _case_topo_linear_attention(rng):
+    from repro.kernels.topo_linear_attention.ops import topo_linear_attention
+    from repro.kernels.topo_linear_attention.ref import (
+        topo_linear_attention_ref)
+
+    qf = jnp.asarray(np.abs(rng.normal(size=(1, 2, 60, 6))), jnp.float32)
+    kf = jnp.asarray(np.abs(rng.normal(size=(1, 2, 60, 6))), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 60, 8)), jnp.float32)
+    cs = jnp.asarray([[0.1, -0.5, -0.2], [0.0, -0.3, -0.4]], jnp.float32)
+    kw = dict(g="exp", dist_scale=1.0 / 60, causal=False)
+    return {"out": (topo_linear_attention(qf, kf, v, cs, chunk=16,
+                                          use_kernel=True, interpret=True,
+                                          **kw),
+                    topo_linear_attention_ref(qf, kf, v, cs, **kw))}
+
+
+_KERNEL_FAMILY_CASES = {
+    "fdist_matvec": _case_fdist_matvec,
+    "flash_attention": _case_flash_attention,
+    "linear_attention": _case_linear_attention,
+    "selective_scan": _case_selective_scan,
+    "topo_linear_attention": _case_topo_linear_attention,
+}
+
+
+@pytest.mark.parametrize("family", sorted(_KERNEL_FAMILY_CASES))
+def test_kernel_family_ops_vs_ref(family, rng):
+    """ops-layer entry point (interpret mode off-TPU) == pure-jnp oracle,
+    one uniform check per kernel family."""
+    for name, (got, ref) in _KERNEL_FAMILY_CASES[family](rng).items():
+        got = jnp.asarray(got, jnp.float32)
+        ref = jnp.asarray(ref, jnp.float32)
+        scale = max(float(jnp.max(jnp.abs(ref))), 1e-6)
+        err = float(jnp.max(jnp.abs(got - ref))) / scale
+        assert err < 2e-5, (family, name, err)
+
+
 def test_kernel_xla_equivalence(rng):
     """Pallas linear-attention kernel == the model's XLA chunked path."""
     from repro.models.attention import causal_linear_attention
