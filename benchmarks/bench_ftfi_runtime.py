@@ -25,6 +25,7 @@ if __package__ in (None, ""):  # `python benchmarks/bench_ftfi_runtime.py`
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 from benchmarks.common import emit, timeit
+from repro import ftfi
 from repro.core import (BTFI, Exponential, Forest, Integrator, build_flat_it,
                         clear_flat_cache, clear_plan_cache)
 from repro.graphs.graph import random_tree, synthetic_graph
@@ -58,19 +59,33 @@ def run(sizes=(1000, 4000, 10000), mesh_subdiv=(3, 4), repeat=2,
             # fig3 measures the paper's FTFI algorithm: disable the host
             # backend's ExpMP fast path so exp f doesn't bypass the IT walk
             opts = {"use_expmp": False} if backend == "host" else {}
-            mk_integ = lambda: Integrator(tree, backend=backend,
-                                          leaf_size=leaf_size, **opts)
+            if backend == "ftfi":
+                # functional plan API row: jitted pure (params, X) -> Y —
+                # params cross the jit boundary explicitly, so this is the
+                # retrace-free serving/vmap/shard path
+                mk_pre = lambda: ftfi.build(tree, leaf_size=leaf_size)
+            else:
+                mk_pre = lambda: Integrator(tree, backend=backend,
+                                            leaf_size=leaf_size, **opts)
             # cold IT build, then backend assembly on the now-warm IT cache:
             # the two add up to a full cold preprocessing pass
             clear_flat_cache()
             clear_plan_cache()
             t_pre_it = timeit(lambda: build_flat_it(tree, leaf_size=leaf_size),
                               repeat=1, warmup=0)
-            t_pre_plan = timeit(mk_integ, repeat=1, warmup=0)
+            t_pre_plan = timeit(mk_pre, repeat=1, warmup=0)
             t_pre = t_pre_it + t_pre_plan
-            integ = mk_integ()
-            engine = integ.describe(fn)["cross_engine"]
-            run_once = lambda: np.asarray(integ.integrate(fn, X))
+            if backend == "ftfi":
+                import jax
+
+                spec, pp = ftfi.build(tree, leaf_size=leaf_size)
+                engine = ftfi.describe(spec, fn)["cross_engine"]
+                fm = jax.jit(ftfi.fastmult(spec, fn))
+                run_once = lambda: np.asarray(fm(pp, X))
+            else:
+                integ = mk_pre()
+                engine = integ.describe(fn)["cross_engine"]
+                run_once = lambda: np.asarray(integ.integrate(fn, X))
             # timeit's warmup call absorbs jit compilation before timing
             t_int = timeit(run_once, repeat=repeat, warmup=1)
             got = run_once()
@@ -94,7 +109,7 @@ def run(sizes=(1000, 4000, 10000), mesh_subdiv=(3, 4), repeat=2,
             })
     # the forest row exercises the fused plan path: skip it for host-only
     # runs (e.g. jax-free debugging) that asked for no jit backend at all
-    if set(backends) & {"plan", "pallas", "forest"}:
+    if set(backends) & {"plan", "pallas", "forest", "ftfi"}:
         rows.append(_forest_row(rng, fn, repeat=repeat))
     return rows
 
@@ -149,8 +164,9 @@ def _forest_row(rng, fn, num_trees=90, repeat=2):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--backend", default="host,plan,pallas",
-                    help="comma list of host,plan,pallas")
+    ap.add_argument("--backend", default="host,plan,pallas,ftfi",
+                    help="comma list of host,plan,pallas,ftfi (ftfi = the "
+                         "functional plan API: jitted pure (params, X) -> Y)")
     ap.add_argument("--sizes", default="1000,4000")
     ap.add_argument("--mesh-subdiv", default="3")
     ap.add_argument("--repeat", type=int, default=2)

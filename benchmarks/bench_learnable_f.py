@@ -1,10 +1,23 @@
 """Paper Fig. 6 / 8-9: learnable rational f — relative Frobenius error vs
-training iterations for different numerator/denominator degrees."""
+training iterations for different numerator/denominator degrees — plus the
+functional-API extension: `--train-edges` trains the TREE METRIC itself
+(edge weights) through `ftfi.reweight` and records the fit-error delta.
+
+  PYTHONPATH=src python benchmarks/bench_learnable_f.py --train-edges
+
+Rows land in BENCH_learnable_f.json via benchmarks.run (fig6 suite).
+"""
 from __future__ import annotations
 
+import argparse
+import pathlib
+import sys
 import time
 
 import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/bench_learnable_f.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 from benchmarks.common import emit
 from repro.core.fit import (fit_rational_f, relative_frobenius_error,
@@ -14,12 +27,76 @@ from repro.graphs.meshes import icosphere, mesh_graph
 from repro.graphs.mst import minimum_spanning_tree
 
 
-def run(steps=300):
+def _train_edges_case(name, g, steps=50, seed=0, leaf_size=32, lr=5e-2):
+    """Train edge weights end-to-end through `ftfi.reweight`.
+
+    Objective: make the tree kernel's ACTION match the graph kernel's —
+    ||M_f(d_T(w)) X - M_f(d_G) X||_F / ||M_f(d_G) X||_F over random probe
+    fields, with f = exp(lam s). Gradients flow jax.grad -> reweight ->
+    PlanParams -> the fused plan executor, i.e. exactly the learnable-
+    tree-metric path the functional API unlocks."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import ftfi
+    from repro.core.cordial import Exponential
+    from repro.graphs.traverse import graph_all_pairs
+    from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+    rng = np.random.default_rng(seed)
+    tree = minimum_spanning_tree(g)
+    spec, _ = ftfi.build(tree, leaf_size=leaf_size, reweightable=True)
+    D_g = graph_all_pairs(g)
+    lam = -2.0 / float(np.mean(D_g))
+    fn = Exponential(lam)
+    X = rng.normal(size=(g.num_vertices, 8)).astype(np.float32)
+    Yt = jnp.asarray(np.exp(lam * D_g).astype(np.float32) @ X)
+    Xj = jnp.asarray(X)
+    y_norm = float(np.linalg.norm(np.asarray(Yt)))
+
+    fm = jax.jit(ftfi.fastmult(spec, fn))
+    # softplus keeps weights positive; init reproduces the MST metric
+    w0 = np.asarray(tree.weights, np.float32)
+    theta = jnp.asarray(np.log(np.expm1(w0)))
+
+    def rel_err(th):
+        pred = fm(ftfi.reweight(spec, jax.nn.softplus(th)), Xj)
+        return jnp.linalg.norm(pred - Yt) / y_norm
+
+    def loss(th):
+        return rel_err(th) ** 2
+
+    cfg = AdamWConfig(lr=lr, weight_decay=0.0, warmup_steps=5,
+                      total_steps=steps, clip_norm=10.0)
+    state = adamw_init(theta)
+
+    @jax.jit
+    def step(th, st):
+        val, grads = jax.value_and_grad(loss)(th)
+        th, st, _ = adamw_update(grads, st, th, cfg)
+        return th, st, val
+
+    err0 = float(rel_err(theta))
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        theta, state, _ = step(theta, state)
+    dt = time.perf_counter() - t0
+    errT = float(rel_err(theta))
+    emit(f"fig6/{name}/train_edges", dt,
+         f"err0={err0:.4f} errT={errT:.4f} delta={err0 - errT:.4f} "
+         f"steps={steps}")
+    return {"case": name, "mode": "train_edges", "steps": steps,
+            "err0": err0, "errT": errT, "delta": err0 - errT,
+            "train_s": dt, "n": g.num_vertices,
+            "num_edges": int(spec.num_edges)}
+
+
+def run(steps=300, train_edges=False, edge_steps=50):
     cases = [
         ("synthetic_n400", synthetic_graph(400, 300, seed=2)),
         ("mesh_ico2", mesh_graph(*icosphere(2))),
     ]
-    out = {}
+    rows = []
     for name, g in cases:
         tree = minimum_spanning_tree(g)
         base = tree_metric_frobenius_error(g, tree)
@@ -33,9 +110,25 @@ def run(steps=300):
             emit(f"fig6/{name}/rational_{num_deg}_{den_deg}", dt,
                  f"frob_err={res.rel_frobenius:.4f} "
                  f"loss0={res.losses[0]:.4f} lossT={res.losses[-1]:.5f}")
-            out[(name, num_deg)] = res.rel_frobenius
-    return out
+            rows.append({"case": name, "mode": f"rational_{num_deg}_{den_deg}",
+                         "steps": steps, "frob_err": res.rel_frobenius,
+                         "identity_frob_err": base,
+                         "train_s": dt, "n": g.num_vertices})
+        if train_edges:
+            rows.append(_train_edges_case(name, g, steps=edge_steps))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--train-edges", action="store_true",
+                    help="also train edge weights through ftfi.reweight "
+                         "(50 steps) and report the fit-error delta")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(steps=args.steps, train_edges=args.train_edges)
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,8 +1,10 @@
 """Benchmark harness: one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV lines; the fig3 suite additionally
 writes BENCH_ftfi_runtime.json, the fig5 suite writes
-BENCH_graph_classification.json and the tab1 suite writes
-BENCH_topo_attention.json so the perf trajectory accumulates across PRs.
+BENCH_graph_classification.json, the fig6 suite writes
+BENCH_learnable_f.json (incl. the ftfi.reweight --train-edges rows) and the
+tab1 suite writes BENCH_topo_attention.json so the perf trajectory
+accumulates across PRs.
 
   python -m benchmarks.run [--quick] [--only fig3,fig4,...]
           [--backend host,plan,pallas] [--baseline prev_BENCH.json]
@@ -78,7 +80,8 @@ def main() -> None:
             n_per_class=15 if args.quick else 30,
             backends=tuple(b for b in args.fig5_backend.split(",") if b),
             repeat=3 if args.quick else 6),
-        "fig6": lambda: bench_learnable_f.run(steps=150 if args.quick else 300),
+        "fig6": lambda: bench_learnable_f.run(
+            steps=150 if args.quick else 300, train_edges=True),
         "tab1": lambda: bench_topo_attention.run(
             backends=tuple(b for b in backends if b != "host") or ("plan",),
             quick=args.quick),
@@ -102,6 +105,9 @@ def main() -> None:
             elif name == "fig5":
                 with open("BENCH_graph_classification.json", "w") as fh:
                     json.dump({"suite": "fig5", "rows": result}, fh, indent=1)
+            elif name == "fig6":
+                with open("BENCH_learnable_f.json", "w") as fh:
+                    json.dump({"suite": "fig6", "rows": result}, fh, indent=1)
             elif name == "tab1":
                 with open("BENCH_topo_attention.json", "w") as fh:
                     json.dump({"suite": "tab1", "rows": result}, fh, indent=1)

@@ -16,6 +16,9 @@ from repro.core.engines import (  # noqa: F401
     Integrator, available_backends, chebyshev_batched_matvec, execute_plan,
     polynomial_batched_matvec, register_backend,
 )
+from repro.core.plan_api import (  # noqa: F401
+    PlanParams, PlanSpec,
+)
 from repro.core.integrator_tree import build_integrator_tree, it_stats  # noqa: F401
 from repro.core.toeplitz import (  # noqa: F401
     causal_toeplitz_matvec, symmetric_toeplitz_matvec, toeplitz_dense,

@@ -15,6 +15,7 @@ plans, GPU backends) plug in as additional registered backends.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Type
 
 _REGISTRY: dict[str, type] = {}
@@ -83,11 +84,43 @@ class Integrator:
         return cls(forest, backend=backend, leaf_size=leaf_size, seed=seed,
                    **opts)
 
+    @classmethod
+    def from_plan(cls, spec, params=None, backend: str = "plan", **opts):
+        """Facade over a functional (spec, params) pair — e.g. an
+        `ftfi.load_plan` artifact. Never touches the IT/plan builders, so a
+        serving restart pays one file read instead of an O(N log N)
+        decomposition."""
+        if backend not in ("plan", "pallas"):
+            raise ValueError(
+                f"from_plan supports the plan/pallas backends, not "
+                f"{backend!r} (the host backend has no plan to load)")
+        from repro.core import plan_api
+
+        obj = cls.__new__(cls)
+        obj.backend = backend
+        obj._impl = get_backend(backend)(
+            None, plan=plan_api.plan_from_spec(spec, params), **opts)
+        return obj
+
+    @property
+    def spec(self):
+        """Static `PlanSpec` of the compiled plan (None on the host
+        backend) — the functional half consumed by `ftfi.apply`."""
+        return getattr(self._impl, "spec", None)
+
+    @property
+    def params(self):
+        """Dynamic `PlanParams` (None on the host backend)."""
+        return getattr(self._impl, "params", None)
+
     @property
     def num_trees(self):
         """Number of trees (1 for single-tree integrators)."""
         forest = getattr(self._impl, "forest", None)
-        return forest.num_trees if forest is not None else 1
+        if forest is not None:
+            return forest.num_trees
+        spec = getattr(self._impl, "spec", None)
+        return spec.num_trees if spec is not None else 1
 
     @property
     def grid_h(self):
@@ -100,6 +133,15 @@ class Integrator:
         return self._impl.integrate(fn, X)
 
     def fastmult(self, fn) -> Callable:
+        """Deprecated closure-capturing path: the returned X -> M_f X
+        closure captures plan state invisibly to jit/grad/vmap. Migrate to
+        the functional API — `ftfi.fastmult(integ.spec, fn)(integ.params,
+        X)` — which passes params explicitly (differentiable, shardable,
+        serializable)."""
+        warnings.warn(
+            "Integrator.fastmult returns a plan-capturing closure; use "
+            "ftfi.fastmult(spec, fn) with (spec, params) = ftfi.build(tree) "
+            "instead", DeprecationWarning, stacklevel=2)
         return self._impl.fastmult(fn)
 
     def describe(self, fn) -> dict:

@@ -4,25 +4,21 @@ fdist_matvec TPU kernel.
 Per-bucket cross jobs (B, U_t) x (B, U_s) are batched straight into
 `fdist_matvec_batched` for the in-kernel f families (poly / exp / expq /
 rational) — each tile of M is built in VMEM and fed to the MXU, never
-materialized in HBM. The segment-summed source field Xp arrives as a static
-slice of the executor's single fused segment-sum (see engines.plan), and the
-jitted fastmult closure is cached per family spec via the inherited
-PlanBackend machinery. General f falls back to the exact Hankel/FFT engine
-on grid-aligned trees, else batched Chebyshev. Off-TPU the kernel runs in
-interpret mode, so results (and tests) are platform-independent.
+materialized in HBM. Engine selection and the executor live in the
+functional core (`plan_api.select_cross` routes these families to the
+kernel whenever backend == "pallas"); this subclass only carries the kernel
+options and keys the shared fastmult memo with them. The kernel consumes
+the *params* distance arrays, so it is traceable — and differentiates —
+through `ftfi.reweight`ed distances. General f falls back to the exact
+Hankel/FFT engine on grid-aligned trees, else batched Chebyshev. Off-TPU
+the kernel runs in interpret mode, so results (and tests) are
+platform-independent.
 """
 from __future__ import annotations
 
-from functools import partial
-
-import numpy as np
-
 from repro.core.engines.base import register_backend
 from repro.core.engines.plan import PlanBackend
-from repro.core.engines.spec import FamilySpec
-from repro.kernels.fdist_matvec.ops import fdist_matvec_batched
-
-KERNEL_MODES = ("poly", "exp", "expq", "rational")
+from repro.core.plan_api import KERNEL_MODES  # noqa: F401  (legacy location)
 
 
 @register_backend("pallas")
@@ -31,10 +27,12 @@ class PallasBackend(PlanBackend):
 
     def __init__(self, tree, leaf_size: int = 64, seed: int = 0,
                  degree: int = 32, detect_grid_spacing: bool = True,
+                 reweightable: bool = False, plan=None,
                  blk_a: int = 128, blk_b: int = 128,
                  interpret: bool | None = None):
         super().__init__(tree, leaf_size=leaf_size, seed=seed, degree=degree,
-                         detect_grid_spacing=detect_grid_spacing)
+                         detect_grid_spacing=detect_grid_spacing,
+                         reweightable=reweightable, plan=plan)
         self.blk_a = blk_a
         self.blk_b = blk_b
         self.interpret = interpret  # None -> auto (TPU compiled, else interp)
@@ -42,21 +40,6 @@ class PallasBackend(PlanBackend):
     def _fm_opts_key(self) -> tuple:
         return (self.blk_a, self.blk_b, self.interpret)
 
-    def select_cross(self, spec: FamilySpec):
-        if spec.mode in KERNEL_MODES:
-            return (f"fdist_matvec:{spec.mode}",
-                    partial(self._fdist_cross, spec))
-        return super().select_cross(spec)  # hankel_fft on grids, chebyshev
-
-    def _fdist_cross(self, spec: FamilySpec, cb, Xp):
-        import jax.numpy as jnp
-
-        out = fdist_matvec_batched(
-            jnp.asarray(cb.tgt_d, jnp.float32),
-            jnp.asarray(cb.src_d, jnp.float32),
-            Xp.astype(jnp.float32),
-            jnp.asarray(np.asarray(spec.coeffs, np.float32)),
-            mode=spec.mode, blk_a=self.blk_a, blk_b=self.blk_b,
-            interpret=self.interpret)
-        # the kernel's rational family is unit-scaled: 1 / (1 + c0 s^2)
-        return out * spec.scale if spec.mode == "rational" else out
+    def _pallas_opts(self) -> dict:
+        return {"blk_a": self.blk_a, "blk_b": self.blk_b,
+                "interpret": self.interpret}

@@ -1,35 +1,38 @@
-"""`plan` backend: the jit-able IT-plan executor with pluggable cross engines.
+"""`plan` backend: the jit-able IT-plan executor, now a facade over the
+functional core (`repro.core.plan_api`).
 
-`execute_plan` walks the compiled `IntegrationPlan` buckets (static shapes,
-differentiable). The per-bucket cross multiply is a dispatch point:
-`cross_multiply(cb, Xp) -> (B, U_t, d)` receives the (numpy) CrossBucket and
-the segment-summed source field, so engines can exploit host-side structure
-(e.g. the integer grid indices of the Hankel/FFT path) at trace time.
+The executor and the batched cross engines (polynomial / exponential /
+hankel_fft / chebyshev) live in `plan_api`; this module keeps the legacy
+entry points working on top of them:
 
-Engines provided here:
-  polynomial_batched_matvec   exact, differentiable in coeffs (LDR rank B+1)
-  exponential_batched_matvec  exact rank-1 with numerical shift
-  hankel_batched_matvec       exact for ANY f when distances are grid-aligned
-                              (consumes IntegrationPlan.grid_h)
-  chebyshev_batched_matvec    spectral fallback for smooth general f
+  execute_plan(plan, X, fn_eval, ...)   derives the plan's (spec, params)
+                                        pair and runs the pure executor
+  PlanBackend                           builds (spec, params) at
+                                        construction and compiles cached
+                                        jitted closures over plan_api.apply
+
+so every Integrator — and everything stacked on it (masks, ViT grids,
+forests, serving) — executes through the same pure
+`_execute(spec, params, ...)` path that `ftfi.apply` exposes directly.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Callable
 
-import numpy as np
-
+from repro.core import plan_api
 from repro.core.engines.base import register_backend
 from repro.core.engines.spec import FamilySpec, spec_of
-from repro.core.integrate import (CrossBucket, IntegrationPlan,
-                                  compile_forest_plan, compile_plan)
+from repro.core.integrate import (IntegrationPlan, compile_forest_plan,
+                                  compile_plan)
+# legacy import locations (tests, masks, attention import these from here)
+from repro.core.plan_api import (  # noqa: F401
+    _lagrange_batched, chebyshev_batched_matvec, exponential_batched_matvec,
+    hankel_batched_matvec, polynomial_batched_matvec)
 from repro.graphs.graph import Forest
 
 
 # ----------------------------------------------------------------------------
-# executor
+# executor (legacy entry point over the functional core)
 # ----------------------------------------------------------------------------
 
 
@@ -38,181 +41,30 @@ def execute_plan(plan: IntegrationPlan, X, fn_eval: Callable,
                  cross_multiply: Callable | None = None):
     """Integrate field X (n, d) with scalar function `fn_eval` (jnp-traceable).
 
-    The cross data-flow is fully precompiled into the plan's flat index
-    arrays, so the executor is a single gather + segment-sum (Eq. 3), one
-    cross-multiply dispatch per size bucket, and a single gather +
-    scatter-add (Eq. 4) — no per-bucket Python re-wrapping of index arrays.
-
-    cross_multiply(cb: CrossBucket, Xp (B, U_s, d)) -> (B, U_t, d): structured
-    multiply per bucket. `batched_matvec(tgt_d, tgt_mask, src_d, src_mask, Xp)`
-    is the legacy array-level form; both default to batched Chebyshev
-    interpolation (spectral-exact for smooth fn_eval, differentiable w.r.t.
-    fn_eval parameters).
+    Thin shim: splits the plan into its functional (spec, params) pair and
+    runs `plan_api._execute`. `cross_multiply(cb, Xp)` (legacy CrossBucket
+    form) and `batched_matvec(tgt_d, tgt_mask, src_d, src_mask, Xp)` are
+    still accepted; both default to batched Chebyshev interpolation
+    (spectral-exact for smooth fn_eval, differentiable w.r.t. fn_eval
+    parameters).
     """
-    import jax
-    import jax.numpy as jnp
+    spec, params = plan_api.specialize(plan)
+    if cross_multiply is not None:
+        legacy = cross_multiply
 
-    if cross_multiply is None:
-        if batched_matvec is None:
-            batched_matvec = partial(chebyshev_batched_matvec, fn_eval,
-                                     degree=degree)
+        def cross(i, tgt_d, tgt_mask, src_d, src_mask, Xp):
+            return legacy(plan.cross_buckets[i], Xp)
+
+    elif batched_matvec is not None:
         bm = batched_matvec
 
-        def cross_multiply(cb, Xp):
-            return bm(jnp.asarray(cb.tgt_d), jnp.asarray(cb.tgt_d_mask),
-                      jnp.asarray(cb.src_d), jnp.asarray(cb.src_d_mask), Xp)
+        def cross(i, tgt_d, tgt_mask, src_d, src_mask, Xp):
+            return bm(tgt_d, tgt_mask, src_d, src_mask, Xp)
 
-    X = jnp.asarray(X)
-    squeeze = X.ndim == 1
-    if squeeze:
-        X = X[:, None]
-    d = X.shape[1]
-    Xpad = jnp.concatenate([X, jnp.zeros((1, d), X.dtype)], axis=0)
-    out = jnp.zeros_like(Xpad)
-
-    for lb in plan.leaf_buckets:
-        Xl = Xpad[lb.ids]  # (B, K, d)
-        M = fn_eval(jnp.asarray(lb.dists))  # (B, K, K)
-        pair_mask = lb.mask[:, :, None] & lb.mask[:, None, :]
-        M = jnp.where(jnp.asarray(pair_mask), M, 0.0)
-        contrib = jnp.einsum("bij,bjd->bid", M, Xl)
-        out = out.at[lb.ids].add(contrib * lb.mask[:, :, None])
-
-    if plan.cross_buckets:
-        # Eq. 3 for every node at once: X'[g] = sum of source-vertex fields
-        # per distance group (pivot/pad groups are empty -> zero)
-        Xp_flat = jax.ops.segment_sum(Xpad[plan.src_gather], plan.src_seg,
-                                      num_segments=plan.n_src_groups)
-        parts = []
-        for cb in plan.cross_buckets:
-            B, Us = cb.src_d.shape
-            Ut = cb.tgt_d.shape[1]
-            Xp = Xp_flat[cb.src_off:cb.src_off + B * Us].reshape(B, Us, d)
-            parts.append(cross_multiply(cb, Xp).reshape(B * Ut, d))
-        cross_flat = (jnp.concatenate(parts, axis=0) if len(parts) > 1
-                      else parts[0])
-        # Eq. 4 for every node at once: gather each target's group value and
-        # scatter-add into the output field
-        out = out.at[plan.tgt_scatter].add(cross_flat[plan.tgt_gather])
-
-    # diagonal corrections: -f(0) X[p] once per internal node
-    f0 = fn_eval(jnp.zeros((1,)))[0]
-    out = out.at[plan.pivots].add(-f0 * Xpad[plan.pivots])
-
-    res = out[:-1]
-    return res[:, 0] if squeeze else res
-
-
-# ----------------------------------------------------------------------------
-# batched cross engines
-# ----------------------------------------------------------------------------
-
-
-def chebyshev_batched_matvec(fn_eval, tgt_d, tgt_mask, src_d, src_mask, Xp,
-                             degree: int = 32):
-    """Batched low-rank multiply via per-node 2D Chebyshev interpolation."""
-    import jax.numpy as jnp
-
-    big = 1e30
-    x_lo = jnp.min(jnp.where(tgt_mask, tgt_d, big), axis=1)  # (B,)
-    x_hi = jnp.max(jnp.where(tgt_mask, tgt_d, -big), axis=1)
-    y_lo = jnp.min(jnp.where(src_mask, src_d, big), axis=1)
-    y_hi = jnp.max(jnp.where(src_mask, src_d, -big), axis=1)
-    r = degree
-    k = np.arange(r)
-    t = np.cos((2 * k + 1) * np.pi / (2 * r))  # (r,)
-    xc = (x_lo[:, None] + x_hi[:, None]) / 2 + (x_hi - x_lo)[:, None] / 2 * t  # (B, r)
-    yc = (y_lo[:, None] + y_hi[:, None]) / 2 + (y_hi - y_lo)[:, None] / 2 * t
-    Bmat = fn_eval(xc[:, :, None] + yc[:, None, :])  # (B, r, r)
-    Lx = _lagrange_batched(tgt_d, xc)  # (B, Kx, r)
-    Ly = _lagrange_batched(src_d, yc)  # (B, Ky, r)
-    tmp = jnp.einsum("bkr,bkd->brd", Ly, Xp)
-    tmp = jnp.einsum("bqr,brd->bqd", Bmat, tmp)
-    return jnp.einsum("bkq,bqd->bkd", Lx, tmp)
-
-
-def _lagrange_batched(pts, nodes):
-    import jax.numpy as jnp
-
-    r = nodes.shape[1]
-    k = np.arange(r)
-    w = ((-1.0) ** k) * np.sin((2 * k + 1) * np.pi / (2 * r))  # (r,)
-    diff = pts[:, :, None] - nodes[:, None, :]  # (B, K, r)
-    small = jnp.abs(diff) < 1e-12
-    diff = jnp.where(small, 1.0, diff)
-    terms = w[None, None, :] / diff
-    L = terms / jnp.sum(terms, axis=-1, keepdims=True)
-    any_small = jnp.any(small, axis=-1, keepdims=True)
-    return jnp.where(any_small, small.astype(L.dtype), L)
-
-
-def polynomial_batched_matvec(coeffs, tgt_d, tgt_mask, src_d, src_mask, Xp):
-    """Exact batched multiply for f = polynomial(coeffs) — differentiable
-    w.r.t. coeffs. O((Kt+Ks) * deg) per node."""
-    import jax.numpy as jnp
-
-    coeffs = jnp.asarray(coeffs)
-    Bdeg = coeffs.shape[0] - 1
-    xpow = _powers_b(tgt_d, Bdeg)  # (B, Kt, deg+1)
-    ypow = _powers_b(src_d, Bdeg)  # (B, Ks, deg+1)
-    ypow = ypow * src_mask[:, :, None]
-    S = jnp.einsum("bku,bkd->bud", ypow, Xp)  # (B, deg+1, d)
-    Wrows = []
-    for l in range(Bdeg + 1):
-        acc = 0.0
-        for tt in range(l, Bdeg + 1):
-            acc = acc + coeffs[tt] * math.comb(tt, l) * S[:, tt - l]
-        Wrows.append(acc)
-    W = jnp.stack(Wrows, axis=1)  # (B, deg+1, d)
-    return jnp.einsum("bkl,bld->bkd", xpow, W)
-
-
-def _powers_b(x, B):
-    import jax.numpy as jnp
-
-    pows = [jnp.ones_like(x)]
-    for _ in range(B):
-        pows.append(pows[-1] * x)
-    return jnp.stack(pows, axis=-1)
-
-
-def exponential_batched_matvec(lam, scale, tgt_d, tgt_mask, src_d, src_mask,
-                               Xp):
-    """Exact rank-1 multiply for f = scale * exp(lam s), numerically shifted.
-    Padded source groups carry zero mass in Xp, so no source mask is needed."""
-    import jax.numpy as jnp
-
-    ly = lam * src_d  # (B, Us)
-    m = jnp.max(jnp.where(src_mask, ly, -jnp.inf), axis=1, keepdims=True)
-    t = jnp.einsum("bu,bud->bd", jnp.exp(ly - m) * src_mask, Xp)  # (B, d)
-    return scale * jnp.exp(lam * tgt_d + m)[:, :, None] * t[:, None, :]
-
-
-def hankel_batched_matvec(fn_eval, h: float, cb: CrossBucket, Xp):
-    """Exact multiply for ANY f on grid-aligned distances (spacing h).
-
-    The integer grid indices come from the host-side (numpy) bucket arrays,
-    so every shape below is static under jit: M embeds into a Hankel matrix
-    and the multiply becomes an FFT correlation with F[k] = f(k h) — the
-    paper's rational-weight embedding (App. A.2.3), batched over IT nodes.
-    """
-    import jax.numpy as jnp
-
-    it = np.rint(cb.tgt_d / h).astype(np.int64)  # (B, Ut); padded -> 0
-    isrc = np.rint(cb.src_d / h).astype(np.int64)  # (B, Us)
-    Ms = int(isrc.max()) + 1 if isrc.size else 1
-    L = (int(it.max()) if it.size else 0) + Ms  # covers all k + m
-    F = fn_eval(h * jnp.arange(L, dtype=Xp.dtype))  # (L,)
-    B, Us, d = Xp.shape
-    bidx = np.arange(B)[:, None]
-    # scatter source mass onto the grid: P[b, m] = sum_{u: isrc[b,u]=m} Xp[b,u]
-    P = jnp.zeros((B, Ms, d), Xp.dtype).at[bidx, isrc].add(Xp)
-    n = 1 << int(np.ceil(np.log2(L + Ms)))
-    Ff = jnp.fft.rfft(F, n=n)  # (n//2+1,)
-    Pf = jnp.fft.rfft(P[:, ::-1], n=n, axis=1)  # (B, n//2+1, d)
-    full = jnp.fft.irfft(Ff[None, :, None] * Pf, n=n, axis=1)
-    out_full = full[:, Ms - 1 : Ms - 1 + L]  # (B, L, d): out[b,k]=sum F[k+m]P[m]
-    return jnp.take_along_axis(out_full, jnp.asarray(it)[:, :, None], axis=1)
+    else:
+        _, cross = plan_api.select_cross(
+            spec, FamilySpec(None, (), fn_eval, None), degree=degree)
+    return plan_api._execute(spec, params, fn_eval, cross, X)
 
 
 # ----------------------------------------------------------------------------
@@ -263,26 +115,34 @@ class PlanBackend:
     exact polynomial/exponential LDR engines, the exact Hankel/FFT engine on
     grid-aligned trees, Chebyshev interpolation otherwise.
 
-    `fastmult` closures are jitted (when the f family is traceable) and
-    cached per family spec, so repeated `integrate` calls pay zero
-    re-dispatch/re-trace overhead."""
+    Construction splits the (content-cached) plan into the functional
+    (spec, params) pair — exposed as `.spec` / `.params` for the pure
+    `ftfi` entry points — and `fastmult` closures are jitted (when the f
+    family is traceable) and cached per family spec, so repeated
+    `integrate` calls pay zero re-dispatch/re-trace overhead."""
 
     name = "plan"
 
     def __init__(self, tree, leaf_size: int = 64, seed: int = 0,
-                 degree: int = 32, detect_grid_spacing: bool = True):
+                 degree: int = 32, detect_grid_spacing: bool = True,
+                 reweightable: bool = False, plan: IntegrationPlan | None = None):
         from repro.core.lru import BoundedLRU
 
         # a Forest compiles into ONE fused plan over the packed vertex space:
         # the executor below is oblivious to how many trees it covers
         self.forest = tree if isinstance(tree, Forest) else None
-        if self.forest is not None:
+        if plan is not None:  # facade-from-artifact path: zero IT rebuild
+            self.plan = plan
+        elif self.forest is not None:
             self.plan = compile_forest_plan(
                 self.forest, leaf_size=leaf_size, seed=seed,
-                detect_grid_spacing=detect_grid_spacing)
+                detect_grid_spacing=detect_grid_spacing,
+                reweightable=reweightable)
         else:
             self.plan = compile_plan(tree, leaf_size=leaf_size, seed=seed,
-                                     detect_grid_spacing=detect_grid_spacing)
+                                     detect_grid_spacing=detect_grid_spacing,
+                                     reweightable=reweightable)
+        self.spec, self.params = plan_api.specialize(self.plan)
         self.degree = degree
         # the semantically-keyed fastmult memo lives ON the plan object:
         # plans are content-hash cached, so repeated Integrator construction
@@ -302,37 +162,27 @@ class PlanBackend:
 
     @property
     def grid_h(self):
-        return self.plan.grid_h
+        return self.spec.grid_h
+
+    def _pallas_opts(self) -> dict | None:
+        """Kernel options for plan_api.select_cross (pallas subclass)."""
+        return None
 
     def select_cross(self, spec: FamilySpec):
         """(engine_name, cross_multiply) for this f family."""
-        if spec.mode == "poly":
-            return "polynomial", partial(self._bm, partial(
-                polynomial_batched_matvec, spec.coeffs))
-        if spec.mode == "exp":
-            return "exponential", partial(self._bm, partial(
-                exponential_batched_matvec, spec.coeffs[0], spec.coeffs[1]))
-        if self.grid_h is not None:
-            return "hankel_fft", partial(hankel_batched_matvec, spec.fn_eval,
-                                         self.grid_h)
-        return "chebyshev", partial(self._bm, partial(
-            chebyshev_batched_matvec, spec.fn_eval, degree=self.degree))
-
-    @staticmethod
-    def _bm(batched_matvec, cb, Xp):
-        import jax.numpy as jnp
-
-        return batched_matvec(jnp.asarray(cb.tgt_d),
-                              jnp.asarray(cb.tgt_d_mask),
-                              jnp.asarray(cb.src_d),
-                              jnp.asarray(cb.src_d_mask), Xp)
+        return plan_api.select_cross(self.spec, spec, backend=self.name,
+                                     degree=self.degree,
+                                     pallas_opts=self._pallas_opts())
 
     def describe(self, fn) -> dict:
         name, _ = self.select_cross(spec_of(fn))
         d = {"backend": self.name, "cross_engine": name,
              "grid_h": self.grid_h}
-        if self.forest is not None:
-            d["num_trees"] = self.forest.num_trees
+        # match the host backend: every Forest-built integrator reports its
+        # tree count (incl. single-tree forests); from_plan facades report
+        # it whenever the spec covers more than one tree
+        if self.forest is not None or self.spec.num_trees > 1:
+            d["num_trees"] = self.spec.num_trees
         return d
 
     def integrate(self, fn, X):
@@ -355,6 +205,18 @@ class PlanBackend:
                 and not isinstance(fn, C.AnyFn)
                 and type(fn) is not C.CordialFn)
 
+    def _bind(self, fspec: FamilySpec) -> Callable:
+        """X -> M_f X over this backend's own (spec, params): the closure
+        form of ftfi.fastmult(spec, fn)(params, X)."""
+        _, cross = self.select_cross(fspec)
+        fe = fspec.fn_eval
+        spec, params = self.spec, self.params
+
+        def eager(X):
+            return plan_api._execute(spec, params, fe, cross, X)
+
+        return eager
+
     def fastmult(self, fn) -> Callable:
         """Cached, jit-compiled closure X -> M_f X (plan arrays are
         trace-time constants). Keyed semantically by (mode, coeffs, scale)
@@ -366,11 +228,7 @@ class PlanBackend:
         spec = spec_of(fn)
         jit_ok = self._jit_ok(fn)
         if spec.mode is None and not _trace_state_clean():
-            _, cross = self.select_cross(spec)
-            return _PlanFastMult(
-                partial(execute_plan, self.plan, fn_eval=spec.fn_eval,
-                        cross_multiply=cross, degree=self.degree),
-                jit_compile=False)
+            return _PlanFastMult(self._bind(spec), jit_compile=False)
         prefix = (self.name,) + self._fm_opts_key()
         if spec.mode is not None:  # semantic key: shared across instances
             cache = self._fm_cache
@@ -381,10 +239,7 @@ class PlanBackend:
         hit = cache.get(key)
         if hit is not None:
             return hit[0]
-        _, cross = self.select_cross(spec)
-        eager = partial(execute_plan, self.plan, fn_eval=spec.fn_eval,
-                        cross_multiply=cross, degree=self.degree)
-        fm = _PlanFastMult(eager, jit_compile=jit_ok)
+        fm = _PlanFastMult(self._bind(spec), jit_compile=jit_ok)
         # pin `fn` alongside: id-based keys must not outlive their object
         cache.put(key, (fm, fn))
         return fm

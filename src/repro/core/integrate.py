@@ -162,7 +162,13 @@ class CrossBucket:
     """Group-distance arrays for one size bucket, padded to the bucket maxima
     (the cross-engine inputs). The per-vertex gather/scatter plumbing lives in
     the flat index arrays on `IntegrationPlan`; `src_off`/`tgt_off` locate
-    this bucket's (B*U) group block inside those flat layouts."""
+    this bucket's (B*U) group block inside those flat layouts.
+
+    `piv` / `tgt_rep` / `src_rep` record, per job row, the pivot vertex and
+    one representative vertex per distance group (padding repeats the
+    pivot, whose pivot-distance is 0 like the original padding). They let
+    the functional API re-derive every distance from edge weights:
+    d[b, u] = dist(piv[b], rep[b, u])."""
 
     tgt_d: np.ndarray  # (B, U_t) float
     tgt_d_mask: np.ndarray  # (B, U_t) bool
@@ -170,6 +176,9 @@ class CrossBucket:
     src_d_mask: np.ndarray  # (B, U_s) bool
     src_off: int = 0  # offset of this bucket's B*U_s groups in the flat X'
     tgt_off: int = 0  # offset of this bucket's B*U_t groups in the flat cross
+    piv: np.ndarray | None = None  # (B,) pivot vertex per job row
+    tgt_rep: np.ndarray | None = None  # (B, U_t) group representative vertex
+    src_rep: np.ndarray | None = None  # (B, U_s)
 
 
 @dataclasses.dataclass
@@ -204,6 +213,14 @@ class IntegrationPlan:
     tgt_scatter: np.ndarray | None = None  # (T,) vertex ids into out
     n_tgt_groups: int = 0  # sum over buckets of B*U_t
     num_cross_jobs: int = 0
+    # provenance (stamped by compile_plan / compile_forest_plan): the
+    # functional PlanSpec carries these across process/device boundaries
+    fingerprint: str = ""
+    leaf_size: int = 0
+    seed: int = 0
+    tree_sizes: tuple = ()
+    reweightable: bool = False
+    rw: dict | None = None  # reweight tables (LCA + root-path CSR)
 
     def num_jobs(self):
         return self.num_cross_jobs
@@ -213,10 +230,41 @@ _PLAN_CACHE = BoundedLRU(32)
 
 
 def clear_plan_cache() -> None:
+    """Drop cached plans AND the memos that live on them.
+
+    Plans carry their jitted-fastmult memo (`_fm_cache`) and functional
+    (spec, params) pair (`_spec_params`) so construction amortizes across
+    Integrator instances — which also means a live Integrator sharing a
+    cached plan keeps those memos alive. Clearing only the LRU would leave
+    every compiled closure (and the device arrays it pins) reachable
+    through such instances; purge the per-plan memos explicitly so a
+    cleared cache actually frees them."""
+    for _, plan in _PLAN_CACHE.items():
+        fm = getattr(plan, "_fm_cache", None)
+        if fm is not None:
+            fm.clear()
+        if getattr(plan, "_spec_params", None) is not None:
+            plan._spec_params = None
     _PLAN_CACHE.clear()
 
 
-def _assemble_plan(flat, n: int, detect_grid_spacing: bool) -> IntegrationPlan:
+def _side_job_arrays(side, expand_groups: bool):
+    """(ids, id_d, d, rep) for one job side. Default: distance-collapsed
+    groups, rep=None (only reweightable builds consume representatives, so
+    the hot construction path pays nothing for them). Expanded (reweightable
+    builds): every vertex is its own group/representative, so re-deriving
+    distances per representative stays exact under ANY edge reweighting —
+    two vertices that tie under the build weights need not tie under new
+    ones."""
+    if not expand_groups:
+        return side.ids, side.id_d, side.d, None
+    k = side.ids.size
+    return (side.ids, np.arange(k, dtype=np.int64), side.d[side.id_d],
+            side.ids)
+
+
+def _assemble_plan(flat, n: int, detect_grid_spacing: bool,
+                   expand_groups: bool = False) -> IntegrationPlan:
     """Flatten a (tree or forest) FlatIT into one IntegrationPlan: cross jobs
     and leaves from EVERY tree share one global index space and are merged
     into the same size-class buckets, so the executor's dispatch count is a
@@ -226,9 +274,12 @@ def _assemble_plan(flat, n: int, detect_grid_spacing: bool) -> IntegrationPlan:
     jobs = []
     for i in range(flat.num_internal):
         L, R = flat.left[i], flat.right[i]
+        piv = int(L.ids[0])
         for t, s in ((L, R), (R, L)):
-            jobs.append((t.ids[1:], t.id_d[1:], t.d, s.ids[1:], s.id_d[1:],
-                         s.d))
+            t_ids, t_idd, t_d, t_rep = _side_job_arrays(t, expand_groups)
+            s_ids, s_idd, s_d, s_rep = _side_job_arrays(s, expand_groups)
+            jobs.append((t_ids[1:], t_idd[1:], t_d, s_ids[1:], s_idd[1:],
+                         s_d, t_rep, s_rep, piv))
 
     # --- bucket cross jobs by ceil(log2(max dim)) => <=2x padding waste
     def bkey(job):
@@ -255,11 +306,22 @@ def _assemble_plan(flat, n: int, detect_grid_spacing: bool) -> IntegrationPlan:
             src_d_mask=np.zeros((B, Us), dtype=bool),
             src_off=src_goff, tgt_off=tgt_goff,
         )
-        for b, (t_ids, t_idd, t_d, s_ids, s_idd, s_d) in enumerate(bjobs):
+        if expand_groups:  # only reweightable builds consume rep tables
+            cb.piv = np.zeros(B, dtype=np.int32)
+            cb.tgt_rep = np.zeros((B, Ut), dtype=np.int32)
+            cb.src_rep = np.zeros((B, Us), dtype=np.int32)
+        for b, (t_ids, t_idd, t_d, s_ids, s_idd, s_d, t_rep, s_rep,
+                piv) in enumerate(bjobs):
             cb.tgt_d[b, :t_d.size] = t_d
             cb.tgt_d_mask[b, :t_d.size] = True
             cb.src_d[b, :s_d.size] = s_d
             cb.src_d_mask[b, :s_d.size] = True
+            if expand_groups:
+                cb.piv[b] = piv
+                cb.tgt_rep[b, :] = piv  # padding: dist(piv, piv) == 0
+                cb.tgt_rep[b, :t_rep.size] = t_rep
+                cb.src_rep[b, :] = piv
+                cb.src_rep[b, :s_rep.size] = s_rep
             src_gather_parts.append(s_ids)
             src_seg_parts.append(src_goff + b * Us + s_idd)
             tgt_gather_parts.append(tgt_goff + b * Ut + t_idd)
@@ -320,26 +382,42 @@ def _assemble_plan(flat, n: int, detect_grid_spacing: bool) -> IntegrationPlan:
 
 
 def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
-                 detect_grid_spacing: bool = True,
-                 use_cache: bool = True) -> IntegrationPlan:
+                 detect_grid_spacing: bool = True, use_cache: bool = True,
+                 reweightable: bool = False) -> IntegrationPlan:
     """Compile (or fetch from the content-hash cache) the integration plan.
 
     Plans are immutable after construction, so repeated `Integrator`
     construction over the same topology (serving, benchmarks, ViT mask
     rebuilds) amortizes to a dict lookup. `seed` is part of the cache key:
-    differently-seeded builds must never alias to the first build."""
+    differently-seeded builds must never alias to the first build.
+
+    `reweightable=True` expands distance groups to per-vertex slots, skips
+    grid detection (an integer grid would not survive weight training) and
+    attaches the LCA / root-path tables `ftfi.reweight` re-derives
+    distances from."""
     from repro.core.itree_flat import build_flat_it, tree_fingerprint
 
+    if reweightable:
+        detect_grid_spacing = False
+    fp = tree_fingerprint(tree)
     if use_cache:
-        key = (tree_fingerprint(tree), max(int(leaf_size), 6), int(seed),
-               detect_grid_spacing)
+        key = (fp, max(int(leaf_size), 6), int(seed), detect_grid_spacing,
+               reweightable)
         hit = _PLAN_CACHE.get(key)
         if hit is not None:
             return hit
 
     flat = build_flat_it(tree, leaf_size=leaf_size, seed=seed,
                          use_cache=use_cache)
-    plan = _assemble_plan(flat, tree.num_vertices, detect_grid_spacing)
+    plan = _assemble_plan(flat, tree.num_vertices, detect_grid_spacing,
+                          expand_groups=reweightable)
+    plan.fingerprint = fp
+    plan.leaf_size = max(int(leaf_size), 6)
+    plan.seed = int(seed)
+    plan.tree_sizes = (tree.num_vertices,)
+    plan.reweightable = reweightable
+    if reweightable:
+        _attach_reweight_tables(plan, [tree])
     if use_cache:
         _PLAN_CACHE.put(key, plan)
     return plan
@@ -347,7 +425,8 @@ def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
 
 def compile_forest_plan(forest, leaf_size: int = 64, seed: int = 0,
                         detect_grid_spacing: bool = True,
-                        use_cache: bool = True) -> IntegrationPlan:
+                        use_cache: bool = True,
+                        reweightable: bool = False) -> IntegrationPlan:
     """Compile a whole `Forest` into ONE IntegrationPlan.
 
     Per-tree plans are never materialized: the batched flat-IT build decomposes
@@ -361,21 +440,126 @@ def compile_forest_plan(forest, leaf_size: int = 64, seed: int = 0,
     The packed field layout is `Forest`'s: vertex v of tree t at row
     `forest.offsets[t] + v`; the multiply is block-diagonal by construction
     (no index from one tree ever references another tree's rows)."""
+    import hashlib
+
     from repro.core.itree_flat import build_flat_forest, tree_fingerprint
 
+    if reweightable:
+        detect_grid_spacing = False
+    fps = tuple(tree_fingerprint(t) for t in forest.trees)
     if use_cache:
-        key = ("forest", tuple(tree_fingerprint(t) for t in forest.trees),
-               max(int(leaf_size), 6), int(seed), detect_grid_spacing)
+        key = ("forest", fps, max(int(leaf_size), 6), int(seed),
+               detect_grid_spacing, reweightable)
         hit = _PLAN_CACHE.get(key)
         if hit is not None:
             return hit
 
     flat = build_flat_forest(forest.trees, leaf_size=leaf_size, seed=seed,
                              use_cache=use_cache)
-    plan = _assemble_plan(flat, forest.num_vertices, detect_grid_spacing)
+    plan = _assemble_plan(flat, forest.num_vertices, detect_grid_spacing,
+                          expand_groups=reweightable)
+    plan.fingerprint = hashlib.sha1(
+        "".join(fps).encode()).hexdigest()
+    plan.leaf_size = max(int(leaf_size), 6)
+    plan.seed = int(seed)
+    plan.tree_sizes = tuple(int(s) for s in forest.tree_sizes)
+    plan.reweightable = reweightable
+    if reweightable:
+        _attach_reweight_tables(plan, forest.trees)
     if use_cache:
         _PLAN_CACHE.put(key, plan)
     return plan
+
+
+# ----------------------------------------------------------------------------
+# reweight tables: everything a differentiable edge_w -> distances map needs
+# ----------------------------------------------------------------------------
+
+
+def _root_path_pairs(trees):
+    """(rows, edges): for every vertex v (global packed id), one entry per
+    edge on v's root path — so depth[v] = sum of edge_w over v's entries is
+    one gather + segment-sum. Edges are numbered in packed per-tree order
+    (the concatenation of each tree's `weights` arrays)."""
+    from repro.graphs.traverse import tree_bfs_order
+
+    rows_parts, edge_parts = [], []
+    voff = eoff = 0
+    for t in trees:
+        n = t.num_vertices
+        _, parent, _ = tree_bfs_order(t, 0)
+        eu = t.edges_u.astype(np.int64)
+        ev = t.edges_v.astype(np.int64)
+        idx = np.arange(eu.size, dtype=np.int64)
+        pe = np.full(n, -1, np.int64)  # edge to parent, per non-root vertex
+        m = parent[ev] == eu
+        pe[ev[m]] = idx[m]
+        m = parent[eu] == ev
+        pe[eu[m]] = idx[m]
+        a = np.flatnonzero(parent >= 0)
+        origin = a.copy()
+        while a.size:  # climb all root paths one ancestor level at a time
+            rows_parts.append(origin + voff)
+            edge_parts.append(pe[a] + eoff)
+            a = parent[a]
+            keep = parent[a] >= 0  # pe[a] valid only for non-root ancestors
+            origin, a = origin[keep], a[keep]
+        voff += n
+        eoff += eu.size
+    if not rows_parts:
+        return np.zeros(0, np.int32), np.zeros(0, np.int32)
+    return (np.concatenate(rows_parts).astype(np.int32),
+            np.concatenate(edge_parts).astype(np.int32))
+
+
+def _forest_lca_query(lcas, offsets, u, v):
+    """Elementwise LCA of global vertex pairs (each pair within one tree)."""
+    shape = u.shape
+    u = np.asarray(u, np.int64).ravel()
+    v = np.asarray(v, np.int64).ravel()
+    out = np.empty(u.shape, np.int64)
+    tid = np.searchsorted(offsets, u, side="right") - 1
+    for t in np.unique(tid):
+        sel = tid == t
+        off = int(offsets[t])
+        out[sel] = lcas[t].lca(u[sel] - off, v[sel] - off) + off
+    return out.reshape(shape)
+
+
+def _attach_reweight_tables(plan: IntegrationPlan, trees) -> None:
+    """Stamp the LCA tables (cross + leaf) and root-path CSR onto the plan:
+    with these, every distance slot is depth[u] + depth[v] - 2 depth[lca],
+    a pure (differentiable) function of the edge weights."""
+    from repro.graphs.traverse import TreeLCA
+
+    sizes = np.array([t.num_vertices for t in trees], np.int64)
+    offsets = np.zeros(sizes.size + 1, np.int64)
+    np.cumsum(sizes, out=offsets[1:])
+    lcas = [TreeLCA(t) for t in trees]
+    n = plan.n
+
+    ctl, csl = [], []
+    for cb in plan.cross_buckets:
+        pv_t = np.broadcast_to(cb.piv[:, None], cb.tgt_rep.shape)
+        pv_s = np.broadcast_to(cb.piv[:, None], cb.src_rep.shape)
+        ctl.append(_forest_lca_query(lcas, offsets, pv_t,
+                                     cb.tgt_rep).astype(np.int32))
+        csl.append(_forest_lca_query(lcas, offsets, pv_s,
+                                     cb.src_rep).astype(np.int32))
+    ll = []
+    for lb in plan.leaf_buckets:
+        B, K = lb.ids.shape
+        u = np.broadcast_to(lb.ids[:, :, None].astype(np.int64), (B, K, K))
+        v = np.broadcast_to(lb.ids[:, None, :].astype(np.int64), (B, K, K))
+        valid = (u < n) & (v < n)
+        out = np.full((B, K, K), n, np.int64)  # pad -> sentinel depth row
+        if valid.any():
+            out[valid] = _forest_lca_query(lcas, offsets, u[valid], v[valid])
+        ll.append(out.astype(np.int32))
+    rows, edges = _root_path_pairs(trees)
+    plan.rw = {"cross_tgt_lca": ctl, "cross_src_lca": csl, "leaf_lca": ll,
+               "path_rows": rows, "path_edges": edges,
+               "num_edges": int(sum(t.num_edges for t in trees))}
 
 
 # The jax plan *executor* lives in repro.core.engines.plan (execute_plan and

@@ -190,32 +190,70 @@ def _purge_dead_tree_fm_entries():
             _TREE_FM_CACHE.discard(key)
 
 
+def _resolve_plan_handle(integrator):
+    """(impl, spec, params) for an `Integrator` facade, a raw backend, or a
+    functional (spec, params) pair. `impl` is the object whose
+    (non-deprecated, memoizing) `fastmult` the mask closure rides; it is
+    None for the pure-pair form, which executes through `plan_api.fastmult`
+    directly."""
+    if isinstance(integrator, (tuple, list)) and len(integrator) == 2:
+        spec, params = integrator
+        return None, spec, params
+    impl = getattr(integrator, "_impl", integrator)
+    return (impl, getattr(impl, "spec", None), getattr(impl, "params", None))
+
+
 def make_tree_fastmult(integrator, g: str, coeffs,
                        dist_scale: float = 1.0) -> Callable:
-    """FastMult_M for M = [f(dist_T(i,j))] via an `Integrator` backend.
+    """FastMult_M for M = [f(dist_T(i,j))] via the functional plan API.
 
     Works on fields with arbitrary leading batch/head axes: the mask multiply
     is linear in the field, so everything folds into the trailing field dim of
     one plan execution. `integrator` is a repro.core.engines.Integrator (any
-    backend with a jit-able fastmult, i.e. plan or pallas).
+    backend with a jit-able fastmult, i.e. plan or pallas) OR a functional
+    `(spec, params)` pair from `ftfi.build` / `ftfi.load_plan`.
 
     For concrete (non-traced) coefficients the closure is memoized per
-    (integrator, g, coeffs, dist_scale), so repeated mask rebuilds (serving,
-    eval loops) reuse one compiled executor; traced coeffs (training under
-    jit) bypass the cache and trace inline as before."""
+    (integrator-or-spec, g, coeffs, dist_scale), so repeated mask rebuilds
+    (serving, eval loops) reuse one compiled executor; traced coeffs
+    (training under jit) bypass the cache and trace inline as before."""
+    impl, p_spec, p_params = _resolve_plan_handle(integrator)
+    ref_target = integrator if impl is not None else p_spec
     key = None
     traced = any(isinstance(leaf, jax.core.Tracer)
                  for leaf in jax.tree_util.tree_leaves(coeffs))
+    if impl is None:
+        # reweighted params may themselves be traced (training edge weights
+        # under an enclosing jit): never cache a tracer-capturing closure
+        traced = traced or any(
+            isinstance(leaf, jax.core.Tracer)
+            for leaf in jax.tree_util.tree_leaves(p_params))
     if not traced:
         _purge_dead_tree_fm_entries()
         c = np.asarray(coeffs)
-        key = (id(integrator), g, float(dist_scale), c.shape,
-               c.tobytes())
+        # the pair path keys on the PARAMS object too: the same spec serves
+        # many PlanParams (ftfi.reweight), and each deserves its own bound
+        # closure — the entry pins `p_params` so its id stays valid for the
+        # entry's lifetime
+        key = (id(ref_target), None if impl is not None else id(p_params),
+               g, float(dist_scale), c.shape, c.tobytes())
         hit = _TREE_FM_CACHE.get(key)
-        if hit is not None and hit[1]() is integrator:
+        if hit is not None and hit[1]() is ref_target:
             return hit[0]
     f_eval = mask_f(g, coeffs, dist_scale)
-    base = integrator.fastmult(f_eval)
+    if impl is not None:
+        # backend path: the impl's fastmult memoizes/jits over ITS OWN
+        # (spec, params) through the same pure executor as plan_api.apply
+        base = impl.fastmult(f_eval)
+    else:
+        from repro.core import plan_api
+
+        fm = plan_api.fastmult(p_spec, f_eval)
+        if traced:  # inside an enclosing jit: trace inline, never pin
+            base = lambda X: fm(p_params, X)  # noqa: E731
+        else:
+            jfm = jax.jit(fm)
+            base = lambda X: jfm(p_params, X)  # noqa: E731
 
     def fastmult(X):  # X: (..., L, c)
         shape = X.shape
@@ -228,13 +266,15 @@ def make_tree_fastmult(integrator, g: str, coeffs,
 
     if key is not None:
         try:
-            ref = weakref.ref(integrator)
+            ref = weakref.ref(ref_target)
         except TypeError:
             ref = None
         if ref is not None:
             # weakly referenced: the purge above drops the entry (and the
-            # plan/closure memory it pins) once the integrator dies
-            _TREE_FM_CACHE.put(key, (fastmult, ref))
+            # plan/closure memory it pins) once the integrator/spec dies.
+            # p_params rides along strongly so the id() in the key cannot
+            # be recycled while the entry lives (None on the impl path).
+            _TREE_FM_CACHE.put(key, (fastmult, ref, p_params))
     return fastmult
 
 

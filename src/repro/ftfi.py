@@ -1,0 +1,17 @@
+"""Public functional plan API (see `repro.core.plan_api` for the engine).
+
+    from repro import ftfi
+
+    spec, params = ftfi.build(tree)                  # static + dynamic halves
+    Y = ftfi.apply(spec, params, Exponential(-0.5), X)
+    fm = jax.jit(ftfi.fastmult(spec, fn))            # (params, X) -> Y
+    ftfi.save_plan("plan.npz", spec, params)
+    spec, params = ftfi.load_plan("plan.npz")        # zero IT rebuild
+
+    # learnable tree metrics
+    spec, params = ftfi.build(tree, reweightable=True)
+    params = ftfi.reweight(spec, edge_w)             # differentiable in edge_w
+"""
+from repro.core.plan_api import (  # noqa: F401
+    KERNEL_MODES, PlanParams, PlanSpec, apply, build, describe, fastmult,
+    load_plan, plan_from_spec, reweight, save_plan, specialize)

@@ -22,6 +22,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--variant", default=None)
+    ap.add_argument("--plan", default=None,
+                    help="ftfi.save_plan artifact (.npz) to serve with — "
+                         "loads the integration plan instead of rebuilding "
+                         "the IT at startup")
     args = ap.parse_args()
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
@@ -32,7 +36,10 @@ def main():
                           topo_dist_scale=1.0 / args.max_len)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, params, batch_slots=args.slots,
-                      max_len=args.max_len)
+                      max_len=args.max_len, plan=args.plan)
+    print(f"serving {args.arch} | slots={args.slots} max_len={args.max_len} "
+          f"variant={cfg.attention_variant}")
+    print(eng.plan_banner())
     rng = np.random.default_rng(0)
     for r in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, size=8).tolist()

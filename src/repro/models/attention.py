@@ -445,6 +445,17 @@ def topo_logit_scale(cfg, p_topo):
     return jnp.broadcast_to(jnp.exp(ls), (cfg.num_heads,))
 
 
+def resolve_topo_backend(cfg, backend: str | None = None) -> str:
+    """Integrator/plan backend for tree- and grid-based topological masks,
+    shared by the ViT grid path and plan-serving. Resolution follows the
+    topo impl axis: explicit `backend` arg > cfg.topo_backend >
+    cfg.topo_attn_impl ("pallas" -> the fused fdist_matvec executor
+    backend, anything else -> "plan")."""
+    return (backend or getattr(cfg, "topo_backend", None)
+            or ("pallas" if getattr(cfg, "topo_attn_impl", "fft") == "pallas"
+                else "plan"))
+
+
 def topo_attention_train(cfg, p, p_topo, x, positions, causal=True):
     """Masked linear attention (Alg. 1) with the sequence topological mask.
 

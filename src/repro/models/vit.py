@@ -24,23 +24,36 @@ _GRID_INTEGRATOR_CACHE = BoundedLRU(8)
 _GRID_DIST_CACHE = BoundedLRU(4)
 
 
+def install_grid_plan(spec, params, backend: str = "plan") -> int:
+    """Adopt a prebuilt/loaded functional plan (e.g. an `ftfi.load_plan`
+    artifact) as the grid integrator for its side length: subsequent
+    `build_grid_integrator` / `build_grid_plan` calls reuse it with ZERO IT
+    rebuild. Returns the grid side. Serving startup uses this to trade the
+    O(N log N) decomposition for one artifact read."""
+    side = int(round(np.sqrt(spec.n)))
+    if side * side != spec.n:
+        raise ValueError(
+            f"plan covers n={spec.n} vertices: not a square patch grid")
+    _GRID_INTEGRATOR_CACHE.put(
+        (side, backend),
+        Integrator.from_plan(spec, params, backend=backend, leaf_size=16))
+    return side
+
+
 def build_grid_integrator(cfg, backend: str | None = None) -> Integrator:
     """Integrator over the patch-grid MST (built once per config). The MST of
     a unit-weight grid graph is grid-aligned (grid_h == 1), so general mask
     functions ride the exact Hankel/FFT cross engine automatically.
 
-    Backend resolution follows the topo impl axis: explicit `backend` arg >
-    cfg.topo_backend > cfg.topo_attn_impl ("pallas" -> the fused fdist_matvec
-    executor backend, anything else -> "plan").
-
-    Memoized per (grid side, backend): repeated mask rebuilds return the same
-    Integrator, so its plan and compiled fastmult closures are reused (the
-    underlying IT/plan construction is additionally content-hash cached)."""
+    Backend resolution is `attention.resolve_topo_backend` (explicit arg >
+    cfg.topo_backend > cfg.topo_attn_impl). Memoized per (grid side,
+    backend): repeated mask rebuilds return the same Integrator, so its plan
+    and compiled fastmult closures are reused (the underlying IT/plan
+    construction is additionally content-hash cached), and a plan installed
+    via `install_grid_plan` is served from here without any IT build."""
     side = int(round(np.sqrt(cfg.num_prefix_embeddings)))
     assert side * side == cfg.num_prefix_embeddings
-    backend = (backend or getattr(cfg, "topo_backend", None)
-               or ("pallas" if getattr(cfg, "topo_attn_impl", "fft") == "pallas"
-                   else "plan"))
+    backend = A.resolve_topo_backend(cfg, backend)
     key = (side, backend)
     integ = _GRID_INTEGRATOR_CACHE.get(key)
     if integ is None:
@@ -48,6 +61,15 @@ def build_grid_integrator(cfg, backend: str | None = None) -> Integrator:
         integ = Integrator(mst, backend=backend, leaf_size=16)
         _GRID_INTEGRATOR_CACHE.put(key, integ)
     return integ
+
+
+def build_grid_plan(cfg, backend: str | None = None):
+    """Functional face of the grid integrator: the (PlanSpec, PlanParams)
+    pair of the patch-grid MST plan — what `ftfi.apply`/`ftfi.save_plan`
+    consume. Same memoization as `build_grid_integrator` (the pair is split
+    off the identical content-cached plan)."""
+    integ = build_grid_integrator(cfg, backend)
+    return integ.spec, integ.params
 
 
 def _grid_tree_distances(side: int):

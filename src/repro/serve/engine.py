@@ -30,9 +30,36 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg, params, batch_slots: int = 4, max_len: int = 256,
-                 eos_id: int | None = None):
+                 eos_id: int | None = None, plan=None):
+        """`plan` optionally preloads a functional integration plan — an
+        `ftfi.save_plan` artifact path or a (PlanSpec, PlanParams) pair —
+        so topological-mask serving never rebuilds the IT at startup:
+        square (patch-grid) plans are installed as the ViT grid integrator,
+        and the provenance (content hash, seed, leaf_size) is surfaced in
+        `plan_banner()` for the serve log."""
         self.cfg = cfg
         self.params = params
+        self.plan_spec = self.plan_params = None
+        self.plan_grid_side = None  # set iff the plan serves the ViT grid
+        if plan is not None:
+            if isinstance(plan, (str, bytes)) or hasattr(plan, "__fspath__"):
+                from repro import ftfi
+
+                plan = ftfi.load_plan(plan)
+            self.plan_spec, self.plan_params = plan
+            side = int(round(np.sqrt(self.plan_spec.n)))
+            # install only when the plan actually covers THIS model's patch
+            # grid — a square n from some other model must not be claimed
+            # as served (its masks would still rebuild the IT on demand)
+            if (side * side == self.plan_spec.n
+                    and getattr(cfg, "num_prefix_embeddings", None)
+                    == self.plan_spec.n):
+                from repro.models import attention as A
+                from repro.models import vit
+
+                self.plan_grid_side = vit.install_grid_plan(
+                    self.plan_spec, self.plan_params,
+                    backend=A.resolve_topo_backend(cfg))
         self.B = batch_slots
         self.S = max_len
         self.eos = eos_id
@@ -43,6 +70,24 @@ class ServeEngine:
             lambda params, cache, tok, pos: api.decode_fn(
                 cfg, params, cache, tok, pos, self.S))
         self.queue: list[Request] = []
+
+    def plan_banner(self) -> str:
+        """Provenance line for the serve log: which integration plan this
+        engine serves with, and where it came from."""
+        if self.plan_spec is None:
+            return "plan: none (no preloaded integration plan)"
+        s = self.plan_spec
+        if self.plan_grid_side is not None:
+            status = (f"installed as {self.plan_grid_side}x"
+                      f"{self.plan_grid_side} grid integrator — "
+                      "zero IT rebuild")
+        else:
+            status = ("loaded, NOT installed: plan does not cover this "
+                      "model's patch grid; consume via Integrator.from_plan")
+        return (f"plan: sha={s.fingerprint[:12]} seed={s.seed} "
+                f"leaf_size={s.leaf_size} n={s.n} trees={s.num_trees} "
+                f"grid_h={s.grid_h} reweightable={s.reweightable} "
+                f"({status})")
 
     def submit(self, req: Request):
         self.queue.append(req)

@@ -140,6 +140,9 @@ def test_itnode_is_immutable():
     assert set(root.left_sorted_ids) == set(root.left_ids)
 
 
+# the facade's fastmult is the deprecated closure-capturing path (asserted
+# in test_plan_api); these tests cover its caching semantics, so silence it
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
 @pytest.mark.parametrize("backend", ["plan", "pallas"])
 def test_fastmult_cache_hit_no_retrace(backend, rng):
     """Satellite: the jitted fastmult closure is cached per family spec —
@@ -162,6 +165,7 @@ def test_fastmult_cache_hit_no_retrace(backend, rng):
     assert integ.fastmult(C.Exponential(-0.2)) is not fm1
 
 
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
 @pytest.mark.parametrize("backend", ["plan", "pallas"])
 def test_fastmult_is_jittable_and_differentiable(backend, rng):
     tree = random_tree(60, seed=9)

@@ -129,6 +129,7 @@ def test_forest_single_fused_dispatch(rng):
     assert len(plan.cross_buckets) + len(plan.leaf_buckets) < 12
 
 
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")  # facade path
 def test_forest_fastmult_shared_across_instances(rng):
     """Content-cached plans share their compiled fastmult closures: a new
     Integrator over an identical forest reuses the jitted executor."""

@@ -1,0 +1,327 @@
+"""Functional plan API: PlanSpec/PlanParams pytree registration, jit/vmap
+parity vs the legacy Integrator facade on trees and forests (all three
+backends), differentiable `ftfi.reweight` (exact under new weights,
+finite-difference gradcheck), save/load round trip with zero IT rebuild,
+the clear_plan_cache fastmult-memo purge, and the facade deprecation."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import ftfi
+from repro.core import Integrator, clear_plan_cache
+from repro.core import cordial as C
+from repro.graphs.graph import (Forest, WeightedTree, path_graph, random_tree,
+                                star_tree)
+
+BACKENDS = ["host", "plan", "pallas"]
+
+PARITY_FNS = [
+    C.Exponential(-0.7, 1.3),
+    C.Polynomial((0.5, -0.2, 0.1)),
+    C.AnyFn(lambda z: 1.0 / (1.0 + z)),
+]
+
+
+def _rel_err(got, ref):
+    return float(np.max(np.abs(np.asarray(got) - np.asarray(ref)))
+                 / max(np.max(np.abs(np.asarray(ref))), 1e-12))
+
+
+# ----------------------------------------------------------------------------
+# pytree registration
+# ----------------------------------------------------------------------------
+
+
+def test_pytree_roundtrip_identity():
+    """tree_flatten((spec, params)) puts every distance/weight array in the
+    leaves and the spec in the aux data; unflatten reproduces both."""
+    spec, params = ftfi.build(random_tree(60, seed=2), leaf_size=16)
+    leaves, treedef = jax.tree_util.tree_flatten((spec, params))
+    assert leaves, "params must contribute pytree leaves"
+    assert all(hasattr(leaf, "dtype") for leaf in leaves)
+    spec2, params2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert spec2 is spec  # the spec IS the (hashable) aux data
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(params2)):
+        assert a is b
+    # spec alone flattens to zero leaves; content digest keys retraces
+    sl, _ = jax.tree_util.tree_flatten(spec)
+    assert sl == []
+    assert hash(spec) == hash(spec2) and spec == spec2
+
+
+def test_params_tree_map():
+    """PlanParams is a real pytree: tree_map reaches every distance array."""
+    spec, params = ftfi.build(random_tree(40, seed=3), leaf_size=8)
+    doubled = jax.tree_util.tree_map(lambda a: a * 2.0, params)
+    for a, b in zip(params.cross_tgt_d, doubled.cross_tgt_d):
+        assert np.allclose(np.asarray(b), 2.0 * np.asarray(a))
+
+
+# ----------------------------------------------------------------------------
+# jit / vmap parity vs the facade
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("fn", PARITY_FNS, ids=lambda f: type(f).__name__)
+def test_apply_jit_parity_tree(backend, fn, rng):
+    tree = random_tree(130, seed=1)
+    X = rng.normal(size=(130, 3))
+    ref = Integrator(tree, backend=backend, leaf_size=16).integrate(fn, X)
+    spec, params = ftfi.build(tree, leaf_size=16)
+    engine = "pallas" if backend == "pallas" else "plan"
+    fm = jax.jit(ftfi.fastmult(spec, fn, backend=engine))
+    got = fm(params, jnp.asarray(X))
+    assert _rel_err(got, ref) < 1e-5
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_apply_jit_parity_forest(backend, rng):
+    trees = [random_tree(18 + 3 * i, seed=i) for i in range(5)]
+    trees += [path_graph(24), star_tree(20, seed=7)]
+    forest = Forest(trees)
+    X = rng.normal(size=(forest.num_vertices, 2))
+    fn = C.Exponential(-0.5, 1.2)
+    ref = Integrator.from_forest(forest, backend=backend,
+                                 leaf_size=8).integrate(fn, X)
+    spec, params = ftfi.build(forest, leaf_size=8)
+    assert spec.num_trees == forest.num_trees
+    engine = "pallas" if backend == "pallas" else "plan"
+    got = jax.jit(ftfi.fastmult(spec, fn, backend=engine))(params, X)
+    assert _rel_err(got, ref) < 1e-5
+
+
+def test_vmap_over_batched_fields(rng):
+    """The pure executor vmaps over a leading batch axis of fields — the
+    thing the closure-capturing API could not express."""
+    tree = random_tree(50, seed=4)
+    spec, params = ftfi.build(tree, leaf_size=8)
+    fn = C.Exponential(-0.4)
+    Xb = jnp.asarray(rng.normal(size=(6, 50, 2)), jnp.float32)
+    fm = ftfi.fastmult(spec, fn)
+    got = jax.vmap(fm, in_axes=(None, 0))(params, Xb)
+    for b in range(Xb.shape[0]):
+        assert _rel_err(got[b], fm(params, Xb[b])) < 1e-6
+
+
+def test_forest_tree_w_output_weights(rng):
+    """params.tree_w scales each tree's output block (== scaling its mask)."""
+    forest = Forest([random_tree(15, seed=i) for i in range(4)])
+    spec, params = ftfi.build(forest, leaf_size=8)
+    fn = C.Exponential(-0.6)
+    X = rng.normal(size=(forest.num_vertices, 2))
+    w = rng.uniform(0.5, 2.0, size=forest.num_trees)
+    ref = np.asarray(ftfi.apply(spec, params, fn, X))
+    ref = ref * forest.broadcast(w)[:, None]
+    pw = dataclasses.replace(params, tree_w=jnp.asarray(w, jnp.float32))
+    got = ftfi.apply(spec, pw, fn, X)
+    assert _rel_err(got, ref) < 1e-6
+
+
+# ----------------------------------------------------------------------------
+# reweight: learnable tree metrics
+# ----------------------------------------------------------------------------
+
+
+def test_reweight_identity_matches_birth_params(rng):
+    tree = random_tree(45, seed=5)
+    spec, params = ftfi.build(tree, leaf_size=8, reweightable=True)
+    fn = C.Exponential(-0.6, 1.1)
+    X = rng.normal(size=(45, 2))
+    a = ftfi.apply(spec, params, fn, X)
+    b = ftfi.apply(spec, ftfi.reweight(spec, tree.weights), fn, X)
+    assert _rel_err(b, a) < 1e-5
+
+
+def test_reweight_exact_under_new_weights(rng):
+    """The IT decomposition is combinatorial, so reweighted params give the
+    TRUE integration for any positive weights on the same topology."""
+    tree = random_tree(40, seed=3)
+    spec, _ = ftfi.build(tree, leaf_size=8, reweightable=True)
+    w1 = rng.uniform(0.2, 2.0, size=tree.num_edges)
+    t1 = WeightedTree(tree.num_vertices, tree.edges_u, tree.edges_v, w1)
+    fn = C.Exponential(-0.6, 1.1)
+    X = rng.normal(size=(40, 2))
+    ref = Integrator(t1, backend="host", leaf_size=8).integrate(fn, X)
+    got = ftfi.apply(spec, ftfi.reweight(spec, w1), fn, X)
+    assert _rel_err(got, ref) < 1e-5
+
+
+def test_reweight_gradcheck_finite_differences(rng):
+    """jax.grad through ftfi.reweight edge weights matches central finite
+    differences (the acceptance-criterion gradcheck)."""
+    tree = random_tree(16, seed=8)
+    spec, _ = ftfi.build(tree, leaf_size=6, reweightable=True)
+    fn = C.Exponential(-0.8)
+    X = jnp.asarray(rng.normal(size=(16, 2)), jnp.float32)
+    R = jnp.asarray(rng.normal(size=(16, 2)), jnp.float32)
+    w0 = jnp.asarray(tree.weights, jnp.float32)
+
+    def loss(w):
+        return jnp.sum(R * ftfi.apply(spec, ftfi.reweight(spec, w), fn, X))
+
+    g = np.asarray(jax.grad(loss)(w0))
+    assert np.all(np.isfinite(g)) and np.sum(np.abs(g)) > 0
+    h = 3e-3
+    for i in range(w0.shape[0]):
+        e = np.zeros(w0.shape, np.float32)
+        e[i] = h
+        fd = (float(loss(w0 + e)) - float(loss(w0 - e))) / (2 * h)
+        ref_scale = max(abs(fd), float(np.max(np.abs(g))), 1e-4)
+        assert abs(g[i] - fd) / ref_scale < 5e-2, (i, g[i], fd)
+
+
+def test_reweight_requires_reweightable_spec():
+    tree = random_tree(20, seed=1)
+    spec, _ = ftfi.build(tree, leaf_size=8)
+    with pytest.raises(ValueError, match="reweightable"):
+        ftfi.reweight(spec, tree.weights)
+    rspec, _ = ftfi.build(tree, leaf_size=8, reweightable=True)
+    assert rspec.grid_h is None  # a trained metric has no static grid
+    with pytest.raises(ValueError, match="edge_w"):
+        ftfi.reweight(rspec, np.ones(3))
+
+
+def test_reweight_forest_packed_edges(rng):
+    """Forest reweight: one packed edge vector re-derives every tree's
+    block, and per-tree output weights ride along."""
+    trees = [random_tree(12, seed=i) for i in range(3)]
+    forest = Forest(trees)
+    spec, _ = ftfi.build(forest, leaf_size=6, reweightable=True)
+    w1 = rng.uniform(0.3, 1.5, size=spec.num_edges)
+    off = 0
+    new_trees = []
+    for t in trees:
+        new_trees.append(WeightedTree(t.num_vertices, t.edges_u, t.edges_v,
+                                      w1[off:off + t.num_edges]))
+        off += t.num_edges
+    fn = C.Exponential(-0.5)
+    X = rng.normal(size=(forest.num_vertices, 2))
+    ref = Integrator.from_forest(Forest(new_trees), backend="host",
+                                 leaf_size=6).integrate(fn, X)
+    got = ftfi.apply(spec, ftfi.reweight(spec, w1), fn, X)
+    assert _rel_err(got, ref) < 1e-5
+
+
+# ----------------------------------------------------------------------------
+# save / load
+# ----------------------------------------------------------------------------
+
+
+def test_save_load_bitwise_roundtrip(tmp_path, rng, monkeypatch):
+    tree = random_tree(70, seed=6)
+    spec, params = ftfi.build(tree, leaf_size=16)
+    fn = C.Exponential(-0.5)
+    X = jnp.asarray(rng.normal(size=(70, 3)), jnp.float32)
+    a = np.asarray(ftfi.apply(spec, params, fn, X))
+    a_jit = np.asarray(jax.jit(ftfi.fastmult(spec, fn))(params, X))
+    path = os.path.join(tmp_path, "plan.npz")
+    ftfi.save_plan(path, spec, params)
+
+    # loading must NEVER rebuild the IT (the whole point of the artifact)
+    import repro.core.itree_flat as itree_flat
+
+    def _boom(*args, **kwargs):
+        raise AssertionError("load_plan triggered an IT rebuild")
+
+    monkeypatch.setattr(itree_flat, "_build", _boom)
+    spec2, params2 = ftfi.load_plan(path)
+    # bit-for-bit in both execution modes: identical arrays in, identical
+    # (eager or jitted) program, identical bits out
+    b = np.asarray(ftfi.apply(spec2, params2, fn, X))
+    assert np.array_equal(a, b)
+    b_jit = np.asarray(jax.jit(ftfi.fastmult(spec2, fn))(params2, X))
+    assert np.array_equal(a_jit, b_jit)
+    assert spec2 == spec and hash(spec2) == hash(spec)
+    # the facade path over the artifact is also rebuild-free and exact
+    integ = Integrator.from_plan(spec2, params2, backend="plan")
+    c = np.asarray(integ.integrate(fn, X))
+    assert _rel_err(c, a) < 1e-6
+
+
+def test_save_load_reweightable_keeps_tables(tmp_path, rng):
+    tree = random_tree(24, seed=2)
+    spec, params = ftfi.build(tree, leaf_size=8, reweightable=True)
+    path = os.path.join(tmp_path, "rw_plan.npz")
+    ftfi.save_plan(path, spec, params)
+    spec2, _ = ftfi.load_plan(path)
+    w1 = rng.uniform(0.4, 1.4, size=tree.num_edges)
+    X = rng.normal(size=(24, 2))
+    a = ftfi.apply(spec, ftfi.reweight(spec, w1), C.Exponential(-0.7), X)
+    b = ftfi.apply(spec2, ftfi.reweight(spec2, w1), C.Exponential(-0.7), X)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------------------------
+# cache semantics + facade deprecation
+# ----------------------------------------------------------------------------
+
+
+def test_clear_plan_cache_drops_fastmult_memos(rng):
+    """Satellite fix: clearing the plan cache must also purge the fastmult
+    memos living ON the cached plan objects — a live Integrator previously
+    kept every compiled closure reachable after a 'clear'."""
+    clear_plan_cache()
+    tree = random_tree(30, seed=9)
+    integ = Integrator(tree, backend="plan", leaf_size=8)
+    with pytest.warns(DeprecationWarning):
+        integ.fastmult(C.Exponential(-0.3))
+    plan = integ._impl.plan
+    assert len(plan._fm_cache) == 1
+    assert plan._spec_params is not None
+    clear_plan_cache()
+    assert len(plan._fm_cache) == 0
+    assert plan._spec_params is None
+    # the integrator itself keeps working (it holds spec/params directly)
+    out = integ.integrate(C.Exponential(-0.3), rng.normal(size=(30, 2)))
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_facade_fastmult_deprecation_warns():
+    integ = Integrator(random_tree(20, seed=0), backend="plan", leaf_size=8)
+    with pytest.warns(DeprecationWarning, match="ftfi.fastmult"):
+        integ.fastmult(C.Exponential(-0.5))
+
+
+def test_masks_accept_functional_pair(rng):
+    """make_tree_fastmult rides a raw (spec, params) pair — no Integrator,
+    no deprecated path."""
+    from repro.core import masks as MK
+    from repro.graphs.graph import grid_graph
+    from repro.graphs.mst import minimum_spanning_tree
+
+    mst = minimum_spanning_tree(grid_graph(5, 5))
+    pair = ftfi.build(mst, leaf_size=8)
+    integ = Integrator(mst, backend="plan", leaf_size=8)
+    coeffs = np.asarray([0.1, -0.4], np.float32)
+    X = jnp.asarray(rng.normal(size=(25, 3)), jnp.float32)
+    a = MK.make_tree_fastmult(pair, "exp", coeffs, 0.5)(X)
+    b = MK.make_tree_fastmult(integ, "exp", coeffs, 0.5)(X)
+    assert _rel_err(a, b) < 1e-5
+    # memoized per spec for concrete coeffs
+    assert (MK.make_tree_fastmult(pair, "exp", coeffs, 0.5)
+            is MK.make_tree_fastmult(pair, "exp", coeffs, 0.5))
+
+
+def test_masks_pair_memo_distinguishes_reweighted_params(rng):
+    """Regression: the (spec, params) memo must key on the params too —
+    a reweighted PlanParams over the SAME spec is a different mask."""
+    from repro.core import masks as MK
+
+    tree = random_tree(30, seed=1)
+    spec, p0 = ftfi.build(tree, leaf_size=8, reweightable=True)
+    coeffs = np.asarray([0.1, -0.4], np.float32)
+    X = jnp.asarray(rng.normal(size=(30, 2)), jnp.float32)
+    fm0 = MK.make_tree_fastmult((spec, p0), "exp", coeffs, 0.5)
+    p1 = ftfi.reweight(
+        spec, rng.uniform(0.3, 1.5, size=tree.num_edges).astype(np.float32))
+    fm1 = MK.make_tree_fastmult((spec, p1), "exp", coeffs, 0.5)
+    assert fm1 is not fm0
+    ref1 = ftfi.apply(spec, p1, MK.mask_f("exp", coeffs, 0.5), X)
+    assert _rel_err(fm1(X), ref1) < 1e-6
+    assert MK.make_tree_fastmult((spec, p0), "exp", coeffs, 0.5) is fm0
