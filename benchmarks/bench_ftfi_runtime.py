@@ -7,17 +7,26 @@ reproducible from one command:
       --backend host,plan,pallas --sizes 1000,4000
 
 Methodology:
-  * pre_s is a COLD build (flat-IT + plan caches cleared per backend) and is
-    reported with its breakdown: pre_it_s (flat IT construction) vs
-    pre_plan_s (plan bucketing / backend assembly on a warm IT cache);
+  * a tiny jitted op runs before any timing so one-time JAX/XLA backend
+    initialization never leaks into the first cold-build number (it used to
+    inflate pre_it_s of whichever row ran first by ~40ms);
+  * the disk plan cache is disabled for the duration of the run — cold
+    numbers must measure compilation, not npz reads;
+  * pre_it_s / pre_plan_s are COLD builds: every round clears the flat-IT
+    and plan caches and the minimum over `repeat` rounds is reported, so a
+    stray GC pause can't masquerade as a compile regression;
   * int_s is measured after a jit warmup call, so compile time never leaks
-    into the steady-state integration number.
+    into the steady-state integration number;
+  * plan-backend rows additionally time the incremental-update path
+    (`ftfi.update_plan`, single leaf insert) against a cold reweightable
+    recompile: upd_s / upd_rebuild_s / upd_speedup.
 """
 from __future__ import annotations
 
 import argparse
 import pathlib
 import sys
+import time
 
 import numpy as np
 
@@ -28,13 +37,62 @@ from benchmarks.common import emit, timeit
 from repro import ftfi
 from repro.core import (BTFI, Exponential, Forest, Integrator, build_flat_it,
                         clear_flat_cache, clear_plan_cache)
+from repro.core.itree_flat import build_flat_forest
 from repro.graphs.graph import random_tree, synthetic_graph
 from repro.graphs.meshes import icosphere, mesh_graph
 from repro.graphs.mst import minimum_spanning_tree
 
 
+def _jax_warmup():
+    """Absorb one-time JAX/XLA initialization before any timed region."""
+    import jax.numpy as jnp
+
+    (jnp.zeros(8) + 1).block_until_ready()
+
+
+def _cold(fn, rounds: int, clear=None):
+    """Min wall-clock over `rounds` cold runs; `clear` resets caches first."""
+    best = float("inf")
+    for _ in range(max(1, rounds)):
+        if clear is not None:
+            clear()
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _clear_all():
+    clear_flat_cache()
+    clear_plan_cache()
+
+
+def _update_stats(tree, leaf_size: int, repeat: int):
+    """(upd_s, upd_rebuild_s): warm single-leaf `ftfi.update_plan` vs a cold
+    reweightable recompile — the number the incremental path exists for."""
+    spec, pp = ftfi.build(tree, leaf_size=leaf_size, reweightable=True)
+    ops = [("insert_leaf", tree.num_vertices // 2, 1.0)]
+    t_upd = timeit(lambda: ftfi.update_plan(spec, pp, ops),
+                   repeat=max(repeat, 3), warmup=1)
+    t_reb = _cold(lambda: ftfi.build(tree, leaf_size=leaf_size,
+                                     reweightable=True),
+                  rounds=repeat, clear=_clear_all)
+    return t_upd, t_reb
+
+
 def run(sizes=(1000, 4000, 10000), mesh_subdiv=(3, 4), repeat=2,
         backends=("host", "plan", "pallas"), leaf_size=256):
+    from repro.core import plan_cache
+
+    _jax_warmup()
+    plan_cache.configure(None)  # cold numbers must measure compilation
+    try:
+        return _run(sizes, mesh_subdiv, repeat, backends, leaf_size)
+    finally:
+        plan_cache.reset_to_env()
+
+
+def _run(sizes, mesh_subdiv, repeat, backends, leaf_size):
     rng = np.random.default_rng(0)
     fn = Exponential(-0.5)
     rows = []
@@ -69,11 +127,12 @@ def run(sizes=(1000, 4000, 10000), mesh_subdiv=(3, 4), repeat=2,
                                             leaf_size=leaf_size, **opts)
             # cold IT build, then backend assembly on the now-warm IT cache:
             # the two add up to a full cold preprocessing pass
-            clear_flat_cache()
-            clear_plan_cache()
-            t_pre_it = timeit(lambda: build_flat_it(tree, leaf_size=leaf_size),
-                              repeat=1, warmup=0)
-            t_pre_plan = timeit(mk_pre, repeat=1, warmup=0)
+            t_pre_it = _cold(
+                lambda: build_flat_it(tree, leaf_size=leaf_size),
+                rounds=repeat, clear=_clear_all)
+            build_flat_it(tree, leaf_size=leaf_size)  # warm the IT cache
+            t_pre_plan = _cold(mk_pre, rounds=repeat,
+                               clear=clear_plan_cache)
             t_pre = t_pre_it + t_pre_plan
             if backend == "ftfi":
                 import jax
@@ -99,14 +158,23 @@ def run(sizes=(1000, 4000, 10000), mesh_subdiv=(3, 4), repeat=2,
                  f"speedup_total={total_b/total_f:.2f}x "
                  f"speedup_int={t_int_btfi/t_int:.2f}x relerr={err:.1e} "
                  f"engine={engine}")
-            rows.append({
+            row = {
                 "case": name, "n": n, "backend": backend, "engine": engine,
                 "pre_s": t_pre, "pre_it_s": t_pre_it,
                 "pre_plan_s": t_pre_plan, "int_s": t_int,
                 "btfi_pre_s": t_pre_btfi, "btfi_int_s": t_int_btfi,
                 "speedup_total": total_b / total_f,
                 "speedup_int": t_int_btfi / t_int, "rel_err": float(err),
-            })
+            }
+            if backend == "plan":
+                t_upd, t_reb = _update_stats(tree, leaf_size, repeat)
+                row["upd_s"] = t_upd
+                row["upd_rebuild_s"] = t_reb
+                row["upd_speedup"] = t_reb / t_upd
+                emit(f"fig3/{name}/n{n}/plan_update", t_upd,
+                     f"rebuild={t_reb*1e3:.1f}ms "
+                     f"upd_speedup={t_reb/t_upd:.1f}x")
+            rows.append(row)
     # the forest row exercises the fused plan path: skip it for host-only
     # runs (e.g. jax-free debugging) that asked for no jit backend at all
     if set(backends) & {"plan", "pallas", "forest", "ftfi"}:
@@ -127,8 +195,7 @@ def _forest_row(rng, fn, num_trees=90, repeat=2):
     # baseline: per-tree host loop (ExpMP off: measure the IT walk, as above)
     mk_loop = lambda: Integrator.from_forest(forest, backend="host",
                                              use_expmp=False)
-    clear_flat_cache()
-    clear_plan_cache()
+    _clear_all()
     t_pre_loop = timeit(mk_loop, repeat=1, warmup=0)
     loop = mk_loop()
     t_int_loop = timeit(lambda: np.asarray(loop.integrate(fn, X)),
@@ -136,11 +203,15 @@ def _forest_row(rng, fn, num_trees=90, repeat=2):
     ref = np.asarray(loop.integrate(fn, X))
     emit(f"fig3/forest{num_trees}/n{n}/loop_pre", t_pre_loop)
     emit(f"fig3/forest{num_trees}/n{n}/loop_int", t_int_loop)
-    # fused forest plan
+    # fused forest plan, with the same cold pre_it / pre_plan split as the
+    # single-tree rows: forest flat-IT build, then fused-plan assembly on
+    # the warm IT cache
     mk_forest = lambda: Integrator.from_forest(forest, backend="plan")
-    clear_flat_cache()
-    clear_plan_cache()
-    t_pre = timeit(mk_forest, repeat=1, warmup=0)
+    t_pre_it = _cold(lambda: build_flat_forest(forest.trees, leaf_size=64),
+                     rounds=repeat, clear=_clear_all)
+    build_flat_forest(forest.trees, leaf_size=64)  # warm the IT cache
+    t_pre_plan = _cold(mk_forest, rounds=repeat, clear=clear_plan_cache)
+    t_pre = t_pre_it + t_pre_plan
     integ = mk_forest()
     engine = integ.describe(fn)["cross_engine"]
     t_int = timeit(lambda: np.asarray(integ.integrate(fn, X)), repeat=repeat,
@@ -148,15 +219,16 @@ def _forest_row(rng, fn, num_trees=90, repeat=2):
     got = np.asarray(integ.integrate(fn, X))
     err = np.max(np.abs(got - ref)) / max(np.max(np.abs(ref)), 1e-9)
     total_f, total_b = t_pre + t_int, t_pre_loop + t_int_loop
-    emit(f"fig3/forest{num_trees}/n{n}/forest_pre", t_pre)
+    emit(f"fig3/forest{num_trees}/n{n}/forest_pre", t_pre,
+         f"it={t_pre_it*1e3:.1f}ms plan={t_pre_plan*1e3:.1f}ms")
     emit(f"fig3/forest{num_trees}/n{n}/forest_int", t_int,
          f"speedup_total={total_b/total_f:.2f}x "
          f"speedup_int={t_int_loop/t_int:.2f}x relerr={err:.1e} "
          f"engine={engine}")
     return {
         "case": f"forest{num_trees}", "n": n, "backend": "forest",
-        "engine": engine, "pre_s": t_pre, "pre_it_s": t_pre,
-        "pre_plan_s": 0.0, "int_s": t_int, "btfi_pre_s": t_pre_loop,
+        "engine": engine, "pre_s": t_pre, "pre_it_s": t_pre_it,
+        "pre_plan_s": t_pre_plan, "int_s": t_int, "btfi_pre_s": t_pre_loop,
         "btfi_int_s": t_int_loop, "speedup_total": total_b / total_f,
         "speedup_int": t_int_loop / t_int, "rel_err": float(err),
     }

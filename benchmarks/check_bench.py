@@ -12,6 +12,16 @@ the fused forest plan. Fails (exit 1) when:
   * the fused forest plan diverges from the per-tree host loop by more than
     --forest-rel-err (default 1e-5) on a small mixed-size forest.
 
+  * a plan-backend row's cold plan assembly (pre_plan_s) exceeds its
+    --plan-ceiling (vectorized assembly runs in single-digit milliseconds;
+    tripping the ceiling means the per-node Python loop came back), or the
+    incremental-update speedup (upd_speedup, warm `ftfi.update_plan` vs a
+    cold reweightable recompile) falls under --upd-speedup;
+  * the disk plan cache fails its live round-trip: a cold-process rebuild
+    (memory caches cleared) with a populated FTFI_PLAN_CACHE directory must
+    hit the cache, return a digest-identical plan, and stay under
+    --cache-warm-ceiling seconds.
+
 --suite topo gates BENCH_topo_attention.json: every topo_attn_impl row must
 stay within --topo-rel-err (default 1e-3) of its exactness anchor, and the
 fused impl must not be slower than the fft chunk-loop path it replaces.
@@ -109,6 +119,82 @@ def check_forest(max_rel_err: float) -> list[str]:
     return errors
 
 
+def check_cold_compile(path: str, plan_ceiling: float,
+                       upd_speedup: float) -> list[str]:
+    """Plan-compile latency gate over the benchmark JSON: cold vectorized
+    assembly must stay in the milliseconds, and the incremental-update path
+    must beat a cold recompile by a wide margin (it exists for nothing
+    else). Rows without the update columns (non-plan backends, forest) are
+    skipped."""
+    with open(path) as fh:
+        rows = json.load(fh)["rows"]
+    errors = []
+    for r in rows:
+        if r["backend"] not in ("plan", "pallas", "ftfi", "forest"):
+            continue
+        if r["pre_plan_s"] > plan_ceiling:
+            errors.append(
+                f"{r['case']}/n{r['n']}/{r['backend']}: cold pre_plan_s "
+                f"{r['pre_plan_s']*1e3:.1f}ms > {plan_ceiling*1e3:.0f}ms "
+                "ceiling (plan assembly re-pythonized?)")
+        if "upd_speedup" in r and r["upd_speedup"] < upd_speedup:
+            errors.append(
+                f"{r['case']}/n{r['n']}/{r['backend']}: upd_speedup "
+                f"{r['upd_speedup']:.1f}x < {upd_speedup:.0f}x (incremental "
+                "update no longer beats recompiling)")
+    if not any("upd_speedup" in r for r in rows):
+        errors.append(f"{path}: no rows carry upd_speedup — bench suite "
+                      "predates the incremental-update columns; regenerate")
+    return errors
+
+
+def check_disk_cache(warm_ceiling: float) -> list[str]:
+    """Live disk-cache round trip: populate a temp FTFI_PLAN_CACHE via one
+    build, clear the in-memory caches (simulating a fresh process), and
+    require the rebuild to hit the disk cache, match digests, and come back
+    well under compile cost."""
+    import tempfile
+
+    import numpy as np  # noqa: F401
+    from repro import ftfi
+    from repro.core import clear_flat_cache, clear_plan_cache, plan_cache
+    from repro.graphs.graph import synthetic_graph
+    from repro.graphs.mst import minimum_spanning_tree
+
+    tree = minimum_spanning_tree(synthetic_graph(2000, 1000, seed=1))
+    errors = []
+    with tempfile.TemporaryDirectory() as d:
+        plan_cache.configure(d, max_mb=64)
+        try:
+            spec1, _ = ftfi.build(tree, leaf_size=64, reweightable=True)
+            st = plan_cache.stats()
+            if st["stores"] < 1 or st["entries"] < 1:
+                errors.append(f"disk cache: build did not populate the "
+                              f"cache dir ({st})")
+            clear_flat_cache()
+            clear_plan_cache()
+            t0 = time.perf_counter()
+            spec2, _ = ftfi.build(tree, leaf_size=64, reweightable=True)
+            dt = time.perf_counter() - t0
+            st = plan_cache.stats()
+            if st["hits"] < 1:
+                errors.append(f"disk cache: cold-process rebuild missed "
+                              f"the populated cache ({st})")
+            if spec1.digest != spec2.digest:
+                errors.append("disk cache: cached plan digest differs from "
+                              "the freshly compiled one")
+            if dt > warm_ceiling:
+                errors.append(
+                    f"disk cache: warm rebuild took {dt:.2f}s > "
+                    f"{warm_ceiling}s ceiling (cache load slower than "
+                    "recompiling?)")
+        finally:
+            plan_cache.reset_to_env()
+            clear_flat_cache()
+            clear_plan_cache()
+    return errors
+
+
 def check_topo_json(path: str, max_rel_err: float) -> list[str]:
     """Topo-attention impl parity gate: every impl row within max_rel_err of
     its anchor, and the fused impl at least as fast as the fft chunk-loop."""
@@ -138,6 +224,16 @@ def main() -> None:
     ap.add_argument("--it-ceiling", type=float, default=5.0)
     ap.add_argument("--forest-rel-err", type=float, default=1e-5)
     ap.add_argument("--topo-rel-err", type=float, default=1e-3)
+    ap.add_argument("--plan-ceiling", type=float, default=0.25,
+                    help="max cold pre_plan_s for jit-backend rows (s); "
+                    "generous vs the ~ms vectorized assembly, trips when "
+                    "the per-node Python loop comes back")
+    ap.add_argument("--upd-speedup", type=float, default=5.0,
+                    help="min upd_speedup (warm update_plan vs cold "
+                    "reweightable recompile) on rows that carry it")
+    ap.add_argument("--cache-warm-ceiling", type=float, default=2.0,
+                    help="max seconds for a cold-process rebuild served "
+                    "from a populated disk plan cache")
     args = ap.parse_args()
 
     if args.suite == "topo":
@@ -146,6 +242,9 @@ def main() -> None:
         errors = check_json(args.json, args.max_rel_err)
         errors += check_it_build(args.it_n, args.it_ceiling)
         errors += check_forest(args.forest_rel_err)
+        errors += check_cold_compile(args.json, args.plan_ceiling,
+                                     args.upd_speedup)
+        errors += check_disk_cache(args.cache_warm_ceiling)
     if errors:
         for e in errors:
             print(f"GATE FAIL: {e}", file=sys.stderr)

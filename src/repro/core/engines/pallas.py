@@ -27,12 +27,13 @@ class PallasBackend(PlanBackend):
 
     def __init__(self, tree, leaf_size: int = 64, seed: int = 0,
                  degree: int = 32, detect_grid_spacing: bool = True,
-                 reweightable: bool = False, plan=None,
-                 blk_a: int = 128, blk_b: int = 128,
+                 reweightable: bool = False, use_cache: bool = True,
+                 plan=None, blk_a: int = 128, blk_b: int = 128,
                  interpret: bool | None = None):
         super().__init__(tree, leaf_size=leaf_size, seed=seed, degree=degree,
                          detect_grid_spacing=detect_grid_spacing,
-                         reweightable=reweightable, plan=plan)
+                         reweightable=reweightable, use_cache=use_cache,
+                         plan=plan)
         self.blk_a = blk_a
         self.blk_b = blk_b
         self.interpret = interpret  # None -> auto (TPU compiled, else interp)

@@ -7,9 +7,9 @@ entry points working on top of them:
 
   execute_plan(plan, X, fn_eval, ...)   derives the plan's (spec, params)
                                         pair and runs the pure executor
-  PlanBackend                           builds (spec, params) at
-                                        construction and compiles cached
-                                        jitted closures over plan_api.apply
+  PlanBackend                           derives (spec, params) lazily from
+                                        the compiled plan and caches jitted
+                                        closures over plan_api.apply
 
 so every Integrator — and everything stacked on it (masks, ViT grids,
 forests, serving) — executes through the same pure
@@ -115,7 +115,7 @@ class PlanBackend:
     exact polynomial/exponential LDR engines, the exact Hankel/FFT engine on
     grid-aligned trees, Chebyshev interpolation otherwise.
 
-    Construction splits the (content-cached) plan into the functional
+    The (content-cached) plan splits lazily into the functional
     (spec, params) pair — exposed as `.spec` / `.params` for the pure
     `ftfi` entry points — and `fastmult` closures are jitted (when the f
     family is traceable) and cached per family spec, so repeated
@@ -125,7 +125,8 @@ class PlanBackend:
 
     def __init__(self, tree, leaf_size: int = 64, seed: int = 0,
                  degree: int = 32, detect_grid_spacing: bool = True,
-                 reweightable: bool = False, plan: IntegrationPlan | None = None):
+                 reweightable: bool = False, use_cache: bool = True,
+                 plan: IntegrationPlan | None = None):
         from repro.core.lru import BoundedLRU
 
         # a Forest compiles into ONE fused plan over the packed vertex space:
@@ -137,12 +138,12 @@ class PlanBackend:
             self.plan = compile_forest_plan(
                 self.forest, leaf_size=leaf_size, seed=seed,
                 detect_grid_spacing=detect_grid_spacing,
-                reweightable=reweightable)
+                use_cache=use_cache, reweightable=reweightable)
         else:
             self.plan = compile_plan(tree, leaf_size=leaf_size, seed=seed,
                                      detect_grid_spacing=detect_grid_spacing,
+                                     use_cache=use_cache,
                                      reweightable=reweightable)
-        self.spec, self.params = plan_api.specialize(self.plan)
         self.degree = degree
         # the semantically-keyed fastmult memo lives ON the plan object:
         # plans are content-hash cached, so repeated Integrator construction
@@ -159,6 +160,19 @@ class PlanBackend:
             self.plan._fm_cache = cache
         self._fm_cache = cache
         self._fm_cache_local = BoundedLRU(64)
+
+    # (spec, params) derive lazily from the plan: construction stays pure
+    # host-side bookkeeping, and the first integrate/fastmult call (which
+    # pays a jit trace anyway) absorbs the one-time specialize + device
+    # transfer. `specialize` memoizes on the plan object, so every property
+    # access after the first is a tuple unpack.
+    @property
+    def spec(self):
+        return plan_api.specialize(self.plan)[0]
+
+    @property
+    def params(self):
+        return plan_api.specialize(self.plan)[1]
 
     @property
     def grid_h(self):

@@ -221,6 +221,11 @@ class IntegrationPlan:
     tree_sizes: tuple = ()
     reweightable: bool = False
     rw: dict | None = None  # reweight tables (LCA + root-path CSR)
+    # update tables (stamped by _assemble_plan): IT skeleton + the
+    # (bucket, row) coordinates of every cross job and leaf, so
+    # `ftfi.update_plan` can patch individual slots without re-deriving the
+    # bucketing
+    upd: dict | None = None
 
     def num_jobs(self):
         return self.num_cross_jobs
@@ -263,12 +268,26 @@ def _side_job_arrays(side, expand_groups: bool):
             side.ids)
 
 
-def _assemble_plan(flat, n: int, detect_grid_spacing: bool,
-                   expand_groups: bool = False) -> IntegrationPlan:
-    """Flatten a (tree or forest) FlatIT into one IntegrationPlan: cross jobs
-    and leaves from EVERY tree share one global index space and are merged
-    into the same size-class buckets, so the executor's dispatch count is a
-    function of size diversity, not of how many trees the plan covers."""
+def _upd_tables(flat, job_bucket, job_row, leaf_bucket, leaf_row) -> dict:
+    """Update tables shared by both assembly paths: the IT skeleton
+    (children refs + per-tree roots) and the (bucket, row) coordinate of
+    every cross job / leaf, which is all `ftfi.update_plan` needs to walk a
+    vertex's IT chain and patch the affected slots in place."""
+    root_refs = (flat.root_refs if flat.root_refs is not None
+                 else np.array([flat.root_ref], np.int64))
+    return {"children": flat.children.astype(np.int64),
+            "root_refs": np.asarray(root_refs, np.int64),
+            "job_bucket": np.asarray(job_bucket, np.int32),
+            "job_row": np.asarray(job_row, np.int32),
+            "leaf_bucket": np.asarray(leaf_bucket, np.int32),
+            "leaf_row": np.asarray(leaf_row, np.int32)}
+
+
+def _assemble_plan_ref(flat, n: int, detect_grid_spacing: bool,
+                       expand_groups: bool = False) -> IntegrationPlan:
+    """Reference (per-node Python loop) plan assembly. Kept as the oracle
+    the vectorized `_assemble_plan` is tested bitwise-equal against; all
+    production paths go through the vectorized assembly."""
     # one job per (node, direction): targets/sources both exclude the pivot
     # (masked-source optimization); distance arrays keep the pivot group 0
     jobs = []
@@ -287,17 +306,19 @@ def _assemble_plan(flat, n: int, detect_grid_spacing: bool,
         return int(np.ceil(np.log2(m)))
 
     buckets: dict[int, list] = {}
-    for job in jobs:
-        buckets.setdefault(bkey(job), []).append(job)
+    for ji, job in enumerate(jobs):
+        buckets.setdefault(bkey(job), []).append((ji, job))
 
+    job_bucket = np.zeros(len(jobs), np.int32)
+    job_row = np.zeros(len(jobs), np.int32)
     cross_buckets = []
     src_gather_parts, src_seg_parts = [], []
     tgt_gather_parts, tgt_scatter_parts = [], []
     src_goff = tgt_goff = 0
-    for key_b in sorted(buckets):
+    for bi, key_b in enumerate(sorted(buckets)):
         bjobs = buckets[key_b]
-        Ut = max(j[2].size for j in bjobs)
-        Us = max(j[5].size for j in bjobs)
+        Ut = max(j[2].size for _, j in bjobs)
+        Us = max(j[5].size for _, j in bjobs)
         B = len(bjobs)
         cb = CrossBucket(
             tgt_d=np.zeros((B, Ut), dtype=np.float64),
@@ -310,8 +331,10 @@ def _assemble_plan(flat, n: int, detect_grid_spacing: bool,
             cb.piv = np.zeros(B, dtype=np.int32)
             cb.tgt_rep = np.zeros((B, Ut), dtype=np.int32)
             cb.src_rep = np.zeros((B, Us), dtype=np.int32)
-        for b, (t_ids, t_idd, t_d, s_ids, s_idd, s_d, t_rep, s_rep,
-                piv) in enumerate(bjobs):
+        for b, (ji, (t_ids, t_idd, t_d, s_ids, s_idd, s_d, t_rep, s_rep,
+                     piv)) in enumerate(bjobs):
+            job_bucket[ji] = bi
+            job_row[ji] = b
             cb.tgt_d[b, :t_d.size] = t_d
             cb.tgt_d_mask[b, :t_d.size] = True
             cb.src_d[b, :s_d.size] = s_d
@@ -338,20 +361,24 @@ def _assemble_plan(flat, n: int, detect_grid_spacing: bool,
     # to its size class, not to the global maximum (K^2 padding waste would
     # dominate leaf-heavy forest plans)
     leaf_groups: dict[int, list] = {}
-    for ids, D in zip(flat.leaf_ids, flat.leaf_dists):
+    for li, (ids, D) in enumerate(zip(flat.leaf_ids, flat.leaf_dists)):
         leaf_groups.setdefault(
-            int(np.ceil(np.log2(max(ids.size, 2)))), []).append((ids, D))
+            int(np.ceil(np.log2(max(ids.size, 2)))), []).append((li, ids, D))
+    leaf_bucket = np.zeros(len(flat.leaf_ids), np.int32)
+    leaf_row = np.zeros(len(flat.leaf_ids), np.int32)
     leaf_buckets = []
-    for key_b in sorted(leaf_groups):
+    for bi, key_b in enumerate(sorted(leaf_groups)):
         leaves = leaf_groups[key_b]
-        K = max(ids.size for ids, _ in leaves)
+        K = max(ids.size for _, ids, _ in leaves)
         B = len(leaves)
         lb = LeafBucket(
             ids=np.full((B, K), n, dtype=np.int32),
             mask=np.zeros((B, K), dtype=bool),
             dists=np.zeros((B, K, K), dtype=np.float64),
         )
-        for b, (ids, D) in enumerate(leaves):
+        for b, (li, ids, D) in enumerate(leaves):
+            leaf_bucket[li] = bi
+            leaf_row[li] = b
             k = ids.size
             lb.ids[b, :k] = ids
             lb.mask[b, :k] = True
@@ -378,7 +405,204 @@ def _assemble_plan(flat, n: int, detect_grid_spacing: bool,
         tgt_scatter=_cat(tgt_scatter_parts, np.int32),
         n_tgt_groups=tgt_goff,
         num_cross_jobs=len(jobs),
+        upd=_upd_tables(flat, job_bucket, job_row, leaf_bucket, leaf_row),
     )
+
+
+def _assemble_plan(flat, n: int, detect_grid_spacing: bool,
+                   expand_groups: bool = False) -> IntegrationPlan:
+    """Flatten a (tree or forest) FlatIT into one IntegrationPlan: cross jobs
+    and leaves from EVERY tree share one global index space and are merged
+    into the same size-class buckets, so the executor's dispatch count is a
+    function of size diversity, not of how many trees the plan covers.
+
+    Vectorized: the per-internal-node Python loop, per-job tuple appends and
+    dict-of-lists bucketing of `_assemble_plan_ref` are replaced by array
+    ops over the IT's concatenated side CSR (`FlatIT.side_cat` /
+    `leaf_cat`) — one stable argsort groups jobs into size-class buckets,
+    `np.maximum.reduceat` yields the bucket maxima, and every padded bucket
+    array plus all four flat executor index arrays fill through `_ranges`
+    scatters, bitwise-identical to the reference output (tested)."""
+    from repro.core.itree_flat import _ranges
+
+    num_i = flat.num_internal
+    J = 2 * num_i
+    sc = flat.side_cat
+    k, u = sc["k"], sc["u"]
+    kptr, uptr = sc["kptr"], sc["uptr"]
+    ids_c, idd_c, d_c = sc["ids"], sc["id_d"], sc["d"]
+    # job j's target side IS side j (side 2i = left, 2i+1 = right); its
+    # source side is the sibling j ^ 1; both jobs of node i share its pivot
+    piv_job = np.repeat(flat.pivots, 2)
+    g = k if expand_groups else u  # distance-group count per side (incl piv)
+    mem = k - 1  # member count per side (targets/sources exclude the pivot)
+
+    cross_buckets = []
+    job_bucket = np.zeros(J, np.int32)
+    job_row = np.zeros(J, np.int32)
+    src_gather = src_seg = tgt_gather = tgt_scatter = np.zeros(0, np.int64)
+    src_goff = tgt_goff = 0
+    if J:
+        # bucket by ceil(log2(max member count)) => <=2x padding waste;
+        # stable sort keeps insertion order within each bucket, matching ref
+        bkey = np.ceil(np.log2(np.maximum(
+            np.maximum(mem, mem[np.arange(J) ^ 1]), 2))).astype(np.int64)
+        order = np.argsort(bkey, kind="stable")
+        sib = order ^ 1  # source side of each sorted job
+        _, bstarts = np.unique(bkey[order], return_index=True)
+        nb = bstarts.size
+        bcounts = np.diff(np.r_[bstarts, J])
+        Ut = np.maximum.reduceat(g[order], bstarts)
+        Us = np.maximum.reduceat(g[sib], bstarts)
+        tgt_off = np.zeros(nb + 1, np.int64)
+        np.cumsum(bcounts * Ut, out=tgt_off[1:])
+        src_off = np.zeros(nb + 1, np.int64)
+        np.cumsum(bcounts * Us, out=src_off[1:])
+        row = np.arange(J) - np.repeat(bstarts, bcounts)
+        bix = np.repeat(np.arange(nb), bcounts)
+        job_bucket[order] = bix
+        job_row[order] = row
+
+        if expand_groups:  # per-vertex distances: d[id_d], all sides at once
+            dvert = d_c[np.repeat(uptr[:-1], k) + idd_c]
+        for bi in range(nb):
+            lo = int(bstarts[bi])
+            hi = lo + int(bcounts[bi])
+            js, ss = order[lo:hi], sib[lo:hi]
+            B, Utb, Usb = hi - lo, int(Ut[bi]), int(Us[bi])
+            cb = CrossBucket(
+                tgt_d=np.zeros((B, Utb), dtype=np.float64),
+                tgt_d_mask=np.zeros((B, Utb), dtype=bool),
+                src_d=np.zeros((B, Usb), dtype=np.float64),
+                src_d_mask=np.zeros((B, Usb), dtype=bool),
+                src_off=int(src_off[bi]), tgt_off=int(tgt_off[bi]),
+            )
+            gt, gs = g[js], g[ss]
+            rt = np.repeat(np.arange(B), gt)
+            ct = _ranges(np.zeros(B, np.int64), gt)
+            rs = np.repeat(np.arange(B), gs)
+            cs = _ranges(np.zeros(B, np.int64), gs)
+            if expand_groups:
+                cb.tgt_d[rt, ct] = dvert[_ranges(kptr[js], gt)]
+                cb.src_d[rs, cs] = dvert[_ranges(kptr[ss], gs)]
+            else:
+                cb.tgt_d[rt, ct] = d_c[_ranges(uptr[js], gt)]
+                cb.src_d[rs, cs] = d_c[_ranges(uptr[ss], gs)]
+            cb.tgt_d_mask[rt, ct] = True
+            cb.src_d_mask[rs, cs] = True
+            if expand_groups:  # rep tables: padding repeats the pivot
+                pj = piv_job[js]
+                cb.piv = pj.astype(np.int32)
+                cb.tgt_rep = np.repeat(pj, Utb).reshape(B, Utb).astype(
+                    np.int32)
+                cb.src_rep = np.repeat(pj, Usb).reshape(B, Usb).astype(
+                    np.int32)
+                cb.tgt_rep[rt, ct] = ids_c[_ranges(kptr[js], gt)]
+                cb.src_rep[rs, cs] = ids_c[_ranges(kptr[ss], gs)]
+            cross_buckets.append(cb)
+        src_goff, tgt_goff = int(src_off[-1]), int(tgt_off[-1])
+
+        # flat executor arrays in (bucket, job) order — one concatenation
+        # pass per kind instead of per-job list appends
+        mem_t, mem_s = mem[order], mem[sib]
+        tjob = tgt_off[bix] + row * Ut[bix]
+        sjob = src_off[bix] + row * Us[bix]
+        tgt_scatter = ids_c[_ranges(kptr[order] + 1, mem_t)]
+        src_gather = ids_c[_ranges(kptr[sib] + 1, mem_s)]
+        if expand_groups:  # expanded group index of vertex j is j itself
+            tidd = _ranges(np.ones(J, np.int64), mem_t)
+            sidd = _ranges(np.ones(J, np.int64), mem_s)
+        else:
+            tidd = idd_c[_ranges(kptr[order] + 1, mem_t)]
+            sidd = idd_c[_ranges(kptr[sib] + 1, mem_s)]
+        tgt_gather = np.repeat(tjob, mem_t) + tidd
+        src_seg = np.repeat(sjob, mem_s) + sidd
+
+    # --- leaf buckets by ceil(log2(k)): a mixed-size forest pads each leaf
+    # to its size class, not to the global maximum (K^2 padding waste would
+    # dominate leaf-heavy forest plans)
+    lc = flat.leaf_cat
+    lk, lptr, ldptr = lc["k"], lc["ptr"], lc["dptr"]
+    Lf = lk.size
+    leaf_bucket = np.zeros(Lf, np.int32)
+    leaf_row = np.zeros(Lf, np.int32)
+    leaf_buckets = []
+    if Lf:
+        lkey = np.ceil(np.log2(np.maximum(lk, 2))).astype(np.int64)
+        lorder = np.argsort(lkey, kind="stable")
+        _, lstarts = np.unique(lkey[lorder], return_index=True)
+        lcounts = np.diff(np.r_[lstarts, Lf])
+        leaf_bucket[lorder] = np.repeat(np.arange(lstarts.size), lcounts)
+        leaf_row[lorder] = np.arange(Lf) - np.repeat(lstarts, lcounts)
+        for bi in range(lstarts.size):
+            lv = lorder[int(lstarts[bi]):int(lstarts[bi]) + int(lcounts[bi])]
+            ks = lk[lv]
+            B, K = lv.size, int(ks.max())
+            lb = LeafBucket(
+                ids=np.full((B, K), n, dtype=np.int32),
+                mask=np.zeros((B, K), dtype=bool),
+                dists=np.zeros((B, K, K), dtype=np.float64),
+            )
+            r = np.repeat(np.arange(B), ks)
+            c = _ranges(np.zeros(B, np.int64), ks)
+            lb.ids[r, c] = lc["ids"][_ranges(lptr[lv], ks)]
+            lb.mask[r, c] = True
+            # raveled (row, col) targets of every k_i x k_i block at once
+            pw = _ranges(np.zeros(B, np.int64), ks * ks)
+            kk = np.repeat(ks, ks * ks)
+            pos = (np.repeat(np.arange(B) * K * K, ks * ks)
+                   + (pw // kk) * K + pw % kk)
+            lb.dists.reshape(-1)[pos] = lc["dflat"][_ranges(ldptr[lv],
+                                                            ks * ks)]
+            leaf_buckets.append(lb)
+
+    h = None
+    if detect_grid_spacing:
+        from repro.core.cordial import detect_grid
+        # one detection over the merged distances reconciles per-tree grids:
+        # the common h of a forest is the gcd of its trees' spacings (None if
+        # any tree is off-grid or the joint span is FFT-impractical)
+        all_d = np.unique(d_c) if d_c.size else np.zeros(1)
+        h = detect_grid(all_d, np.zeros(1))
+    return IntegrationPlan(
+        n=n, cross_buckets=cross_buckets, leaf_buckets=leaf_buckets,
+        pivots=flat.pivots.astype(np.int32), grid_h=h,
+        src_gather=src_gather.astype(np.int32),
+        src_seg=src_seg.astype(np.int32),
+        n_src_groups=src_goff,
+        tgt_gather=tgt_gather.astype(np.int32),
+        tgt_scatter=tgt_scatter.astype(np.int32),
+        n_tgt_groups=tgt_goff,
+        num_cross_jobs=J,
+        upd=_upd_tables(flat, job_bucket, job_row, leaf_bucket, leaf_row),
+    )
+
+
+def _disk_cache_load(key) -> IntegrationPlan | None:
+    """Consult the disk-persistent plan cache (see repro.core.plan_cache):
+    a hit reconstructs the plan via `plan_from_spec` — one file read, zero
+    IT rebuild. Disabled (None) unless a cache directory is configured."""
+    from repro.core import plan_cache
+
+    if not plan_cache.enabled():
+        return None
+    hit = plan_cache.load(plan_cache.key_str(key))
+    if hit is None:
+        return None
+    from repro.core import plan_api
+
+    return plan_api.plan_from_spec(*hit)
+
+
+def _disk_cache_store(key, plan: IntegrationPlan) -> None:
+    from repro.core import plan_cache
+
+    if not plan_cache.enabled():
+        return
+    from repro.core import plan_api
+
+    spec, params = plan_api.specialize(plan)
+    plan_cache.store(plan_cache.key_str(key), spec, params)
 
 
 def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
@@ -390,6 +614,11 @@ def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
     construction over the same topology (serving, benchmarks, ViT mask
     rebuilds) amortizes to a dict lookup. `seed` is part of the cache key:
     differently-seeded builds must never alias to the first build.
+
+    Cache hierarchy: in-memory BoundedLRU first, then (when the
+    `FTFI_PLAN_CACHE` directory is configured) the disk-persistent artifact
+    cache — so cold *process* starts over a known topology pay one npz read
+    instead of an O(N log N) decomposition. `use_cache=False` bypasses both.
 
     `reweightable=True` expands distance groups to per-vertex slots, skips
     grid detection (an integer grid would not survive weight training) and
@@ -406,6 +635,10 @@ def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
         hit = _PLAN_CACHE.get(key)
         if hit is not None:
             return hit
+        hit = _disk_cache_load(key)
+        if hit is not None:
+            _PLAN_CACHE.put(key, hit)
+            return hit
 
     flat = build_flat_it(tree, leaf_size=leaf_size, seed=seed,
                          use_cache=use_cache)
@@ -420,6 +653,7 @@ def compile_plan(tree: WeightedTree, leaf_size: int = 64, seed: int = 0,
         _attach_reweight_tables(plan, [tree])
     if use_cache:
         _PLAN_CACHE.put(key, plan)
+        _disk_cache_store(key, plan)
     return plan
 
 
@@ -453,6 +687,10 @@ def compile_forest_plan(forest, leaf_size: int = 64, seed: int = 0,
         hit = _PLAN_CACHE.get(key)
         if hit is not None:
             return hit
+        hit = _disk_cache_load(key)
+        if hit is not None:
+            _PLAN_CACHE.put(key, hit)
+            return hit
 
     flat = build_flat_forest(forest.trees, leaf_size=leaf_size, seed=seed,
                              use_cache=use_cache)
@@ -468,6 +706,7 @@ def compile_forest_plan(forest, leaf_size: int = 64, seed: int = 0,
         _attach_reweight_tables(plan, forest.trees)
     if use_cache:
         _PLAN_CACHE.put(key, plan)
+        _disk_cache_store(key, plan)
     return plan
 
 
@@ -557,9 +796,23 @@ def _attach_reweight_tables(plan: IntegrationPlan, trees) -> None:
             out[valid] = _forest_lca_query(lcas, offsets, u[valid], v[valid])
         ll.append(out.astype(np.int32))
     rows, edges = _root_path_pairs(trees)
+    # packed global edge endpoints + build weights: `update_plan` needs the
+    # live edge list to validate leaf deletions and to re-derive distances
+    # host-side after structural edits
+    eu_parts, ev_parts, ew_parts = [], [], []
+    for t, off in zip(trees, offsets[:-1]):
+        eu_parts.append(t.edges_u.astype(np.int64) + off)
+        ev_parts.append(t.edges_v.astype(np.int64) + off)
+        ew_parts.append(t.weights.astype(np.float64))
     plan.rw = {"cross_tgt_lca": ctl, "cross_src_lca": csl, "leaf_lca": ll,
                "path_rows": rows, "path_edges": edges,
-               "num_edges": int(sum(t.num_edges for t in trees))}
+               "num_edges": int(sum(t.num_edges for t in trees)),
+               "edges_u": (np.concatenate(eu_parts).astype(np.int32)
+                           if eu_parts else np.zeros(0, np.int32)),
+               "edges_v": (np.concatenate(ev_parts).astype(np.int32)
+                           if ev_parts else np.zeros(0, np.int32)),
+               "edge_w0": (np.concatenate(ew_parts)
+                           if ew_parts else np.zeros(0, np.float64))}
 
 
 # The jax plan *executor* lives in repro.core.engines.plan (execute_plan and

@@ -40,6 +40,7 @@ builds to the first one built.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 
 import numpy as np
@@ -91,6 +92,55 @@ class FlatIT:
     @property
     def num_leaves(self) -> int:
         return len(self.leaf_ids)
+
+    # cached_property writes the instance __dict__ directly, which bypasses
+    # the frozen-dataclass __setattr__ — the concatenated views below are
+    # derived data, so caching them on the (immutable) instance is safe and
+    # amortizes across repeated plan assemblies over one IT
+    @functools.cached_property
+    def side_cat(self) -> dict:
+        """Concatenated CSR over ALL job sides, interleaved as side 2i =
+        left[i], side 2i+1 = right[i]. `kptr`/`uptr` are the exclusive
+        prefix sums of per-side vertex / unique-distance counts, so the
+        vectorized plan assembly addresses every side with array ops
+        instead of re-walking the per-node FlatSide objects."""
+        sides: list = []
+        for i in range(self.num_internal):
+            sides.append(self.left[i])
+            sides.append(self.right[i])
+        k = np.array([s.ids.size for s in sides], np.int64)
+        u = np.array([s.d.size for s in sides], np.int64)
+        kptr = np.zeros(k.size + 1, np.int64)
+        np.cumsum(k, out=kptr[1:])
+        uptr = np.zeros(u.size + 1, np.int64)
+        np.cumsum(u, out=uptr[1:])
+
+        def cat(arrs, dtype):
+            return (np.concatenate(arrs) if arrs
+                    else np.zeros(0, dtype))
+
+        return {
+            "k": k, "u": u, "kptr": kptr, "uptr": uptr,
+            "ids": cat([s.ids for s in sides], np.int64),
+            "id_d": cat([s.id_d for s in sides], np.int64),
+            "d": cat([s.d for s in sides], np.float64),
+        }
+
+    @functools.cached_property
+    def leaf_cat(self) -> dict:
+        """Concatenated leaf arrays: ids CSR plus the raveled distance
+        matrices (`dptr` is the exclusive prefix sum of k_i^2)."""
+        k = np.array([ids.size for ids in self.leaf_ids], np.int64)
+        ptr = np.zeros(k.size + 1, np.int64)
+        np.cumsum(k, out=ptr[1:])
+        dptr = np.zeros(k.size + 1, np.int64)
+        np.cumsum(k * k, out=dptr[1:])
+        ids = (np.concatenate(self.leaf_ids) if self.leaf_ids
+               else np.zeros(0, np.int64))
+        dflat = (np.concatenate([D.ravel() for D in self.leaf_dists])
+                 if self.leaf_dists else np.zeros(0, np.float64))
+        return {"k": k, "ptr": ptr, "dptr": dptr, "ids": ids,
+                "dflat": dflat}
 
 
 # ----------------------------------------------------------------------------

@@ -23,6 +23,7 @@ Pure entry points (also exposed as `repro.ftfi`):
   apply(spec, params, fn, X)      -> Y            (jit/vmap/grad-safe)
   fastmult(spec, fn)              -> (params, X) -> Y   (jittable)
   reweight(spec, edge_w)          -> PlanParams   (differentiable in edge_w)
+  update_plan(spec, params, ops)  -> (spec', params')  incremental edits
   save_plan / load_plan           npz round trip, zero IT rebuild at load
 
 Reweight exactness: the IT decomposition is purely combinatorial (it covers
@@ -52,6 +53,9 @@ from repro.core.integrate import (CrossBucket, IntegrationPlan, LeafBucket,
 KERNEL_MODES = ("poly", "exp", "expq", "rational")
 
 _SAVE_VERSION = 1
+# PlanSpec field-layout generation, mixed into disk-cache keys (NOT the npz
+# version: old artifacts still load — absent fields default to None)
+_SPEC_SCHEMA = 2
 
 
 # ----------------------------------------------------------------------------
@@ -104,15 +108,32 @@ class PlanSpec:
     cross_src_rep: tuple | None = None
     cross_src_lca: tuple | None = None
     leaf_lca: tuple | None = None  # of (B, K, K) lca(ids_i, ids_j)
+    # update tables (only when compiled by this codebase's assembler; they
+    # let `update_plan` patch single leaves without a rebuild)
+    children: np.ndarray | None = None  # (I, 2) canonical IT child refs
+    root_refs: np.ndarray | None = None  # (num_trees,) per-tree root ref
+    job_bucket: np.ndarray | None = None  # (2I,) bucket index per cross job
+    job_row: np.ndarray | None = None  # (2I,) row within bucket
+    leaf_bucket: np.ndarray | None = None  # (L,) bucket per leaf node
+    leaf_row: np.ndarray | None = None  # (L,) row within leaf bucket
+    edges_u: np.ndarray | None = None  # (E,) packed edge endpoints (global)
+    edges_v: np.ndarray | None = None
+    edge_w0: np.ndarray | None = None  # (E,) build-time edge weights
+    ghosts: np.ndarray | None = None  # deleted-vertex ids (update_plan)
 
     def __post_init__(self):
-        h = hashlib.sha1()
-        for f in dataclasses.fields(self):
-            _mix(h, getattr(self, f.name))
-        object.__setattr__(self, "_digest", h.hexdigest())
+        # digest is lazy: hashing tens of MB of index arrays costs more than
+        # vectorized assembly itself, and incremental updates / cache hits
+        # often never need it
+        object.__setattr__(self, "_digest", None)
 
     @property
     def digest(self) -> str:
+        if self._digest is None:
+            h = hashlib.sha1()
+            for f in dataclasses.fields(self):
+                _mix(h, getattr(self, f.name))
+            object.__setattr__(self, "_digest", h.hexdigest())
         return self._digest
 
     @property
@@ -123,17 +144,17 @@ class PlanSpec:
                 "reweightable": self.reweightable}
 
     def __hash__(self):
-        return hash(self._digest)
+        return hash(self.digest)
 
     def __eq__(self, other):
         return (type(other) is PlanSpec
-                and other._digest == self._digest)
+                and other.digest == self.digest)
 
     def __repr__(self):
         return (f"PlanSpec(n={self.n}, num_trees={self.num_trees}, "
                 f"leaf_size={self.leaf_size}, seed={self.seed}, "
                 f"grid_h={self.grid_h}, reweightable={self.reweightable}, "
-                f"sha={self._digest[:12]})")
+                f"sha={self.digest[:12]})")
 
 
 def _mix(h, val):
@@ -191,6 +212,7 @@ def specialize(plan: IntegrationPlan):
     if cached is not None:
         return cached
     rw = getattr(plan, "rw", None) or {}
+    upd = getattr(plan, "upd", None) or {}
     spec = PlanSpec(
         n=plan.n,
         num_trees=max(len(plan.tree_sizes), 1),
@@ -229,6 +251,16 @@ def specialize(plan: IntegrationPlan):
                        if rw else None),
         cross_src_lca=tuple(rw["cross_src_lca"]) if rw else None,
         leaf_lca=tuple(rw["leaf_lca"]) if rw else None,
+        children=upd.get("children"),
+        root_refs=upd.get("root_refs"),
+        job_bucket=upd.get("job_bucket"),
+        job_row=upd.get("job_row"),
+        leaf_bucket=upd.get("leaf_bucket"),
+        leaf_row=upd.get("leaf_row"),
+        edges_u=rw.get("edges_u"),
+        edges_v=rw.get("edges_v"),
+        edge_w0=rw.get("edge_w0"),
+        ghosts=np.zeros(0, np.int32) if upd else None,
     )
     params = _birth_params(spec)
     plan._spec_params = (spec, params)
@@ -236,12 +268,17 @@ def specialize(plan: IntegrationPlan):
 
 
 def _birth_params(spec: PlanSpec) -> PlanParams:
-    return PlanParams(
-        cross_tgt_d=tuple(jnp.asarray(d) for d in spec.cross_tgt_d0),
-        cross_src_d=tuple(jnp.asarray(d) for d in spec.cross_src_d0),
-        leaf_dists=tuple(jnp.asarray(d) for d in spec.leaf_dists0),
-        tree_w=None,
-    )
+    # lazy specialize may first fire INSIDE a jit trace (the engine's spec/
+    # params properties); without this guard the float64->float32
+    # canonicalization becomes a traced op and the memoized params would
+    # leak tracers out of that trace
+    with jax.ensure_compile_time_eval():
+        return PlanParams(
+            cross_tgt_d=tuple(jnp.asarray(d) for d in spec.cross_tgt_d0),
+            cross_src_d=tuple(jnp.asarray(d) for d in spec.cross_src_d0),
+            leaf_dists=tuple(jnp.asarray(d) for d in spec.leaf_dists0),
+            tree_w=None,
+        )
 
 
 def plan_from_spec(spec: PlanSpec, params: PlanParams | None = None
@@ -276,6 +313,14 @@ def plan_from_spec(spec: PlanSpec, params: PlanParams | None = None
                    "cross_tgt_lca": list(spec.cross_tgt_lca),
                    "cross_src_lca": list(spec.cross_src_lca),
                    "leaf_lca": list(spec.leaf_lca)}
+        if spec.edges_u is not None:
+            plan.rw.update(edges_u=spec.edges_u, edges_v=spec.edges_v,
+                           edge_w0=spec.edge_w0)
+    if spec.children is not None:
+        plan.upd = {"children": spec.children, "root_refs": spec.root_refs,
+                    "job_bucket": spec.job_bucket, "job_row": spec.job_row,
+                    "leaf_bucket": spec.leaf_bucket,
+                    "leaf_row": spec.leaf_row}
     plan._spec_params = (spec, params if params is not None
                          else _birth_params(spec))
     return plan
@@ -636,7 +681,12 @@ def reweight(spec: PlanSpec, edge_w, tree_w=None) -> PlanParams:
 # ----------------------------------------------------------------------------
 
 _SPEC_ARRAY_FIELDS = ("pivots", "src_gather", "src_seg", "tgt_gather",
-                      "tgt_scatter", "path_rows", "path_edges")
+                      "tgt_scatter", "path_rows", "path_edges",
+                      # update tables (absent in pre-schema-2 artifacts;
+                      # loader defaults them to None)
+                      "children", "root_refs", "job_bucket", "job_row",
+                      "leaf_bucket", "leaf_row", "edges_u", "edges_v",
+                      "edge_w0", "ghosts")
 _SPEC_TUPLE_FIELDS = ("cross_tgt_mask", "cross_src_mask", "cross_tgt_d0",
                       "cross_src_d0", "leaf_ids", "leaf_mask", "leaf_dists0",
                       "cross_piv", "cross_tgt_rep", "cross_tgt_lca",
@@ -697,7 +747,8 @@ def load_plan(path):
                 val = tuple(val)
             kwargs[name] = val
         for name in _SPEC_ARRAY_FIELDS:
-            kwargs[name] = z[f"s_{name}"] if meta[f"has_{name}"] else None
+            kwargs[name] = (z[f"s_{name}"]
+                            if meta.get(f"has_{name}", False) else None)
         for name in _SPEC_TUPLE_FIELDS:
             ln = meta[f"len_{name}"]
             kwargs[name] = (None if ln < 0 else
@@ -716,3 +767,8 @@ def load_plan(path):
                     else None),
         )
     return spec, params
+
+
+# re-export: incremental edits live in their own module but belong to this
+# API surface (imported at the bottom to avoid a circular import)
+from repro.core.plan_update import update_plan  # noqa: E402,F401

@@ -1,0 +1,198 @@
+"""Disk-persistent LRU plan cache.
+
+`compile_plan` / `compile_forest_plan` consult this cache after the
+in-memory BoundedLRU misses and BEFORE any IT build: a hit is one
+`load_plan` npz read reconstructed through `plan_from_spec` (zero IT
+rebuild), which turns cold *process* starts — serving restarts, benchmark
+reruns, per-request trees that recur across workers — into a file read.
+
+Configuration (environment, overridable programmatically):
+
+  FTFI_PLAN_CACHE          cache directory; unset/empty -> cache disabled
+  FTFI_PLAN_CACHE_MAX_MB   total size budget in MB (default 512); the
+                           least-recently-USED artifacts (hits touch mtime)
+                           are evicted once the budget is exceeded
+
+Artifacts are the standard `save_plan` npz format keyed by a sha1 over the
+full compile key (content fingerprint(s), leaf_size, seed, grid detection,
+reweightable) plus the serialization schema version — so incompatible
+artifacts from older code versions can never be loaded. Writes are atomic
+(tmp file + os.replace) and every cache error degrades to a miss: a
+corrupt or torn artifact is deleted and the plan is rebuilt.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import tempfile
+
+_ENV_DIR = "FTFI_PLAN_CACHE"
+_ENV_MAX_MB = "FTFI_PLAN_CACHE_MAX_MB"
+_DEFAULT_MAX_MB = 512.0
+_PREFIX = "ftfi-plan-"
+
+_UNSET = object()
+_dir_override: object = _UNSET
+_max_mb_override: object = _UNSET
+_stats = {"hits": 0, "misses": 0, "stores": 0, "evictions": 0,
+          "errors": 0}
+
+
+def configure(directory, max_mb: float | None = None) -> None:
+    """Programmatic override of the environment configuration:
+    `configure("/path")` enables the cache there, `configure(None)`
+    disables it. `max_mb` optionally overrides the size budget."""
+    global _dir_override, _max_mb_override
+    _dir_override = os.fspath(directory) if directory else None
+    if max_mb is not None:
+        _max_mb_override = float(max_mb)
+
+
+def reset_to_env() -> None:
+    """Drop programmatic overrides: follow FTFI_PLAN_CACHE(_MAX_MB) again."""
+    global _dir_override, _max_mb_override
+    _dir_override = _UNSET
+    _max_mb_override = _UNSET
+
+
+def cache_dir() -> str | None:
+    if _dir_override is not _UNSET:
+        return _dir_override  # type: ignore[return-value]
+    return os.environ.get(_ENV_DIR) or None
+
+
+def enabled() -> bool:
+    return cache_dir() is not None
+
+
+def _max_bytes() -> int:
+    if _max_mb_override is not _UNSET:
+        return int(float(_max_mb_override) * 1e6)  # type: ignore[arg-type]
+    try:
+        return int(float(os.environ.get(_ENV_MAX_MB, _DEFAULT_MAX_MB)) * 1e6)
+    except ValueError:
+        return int(_DEFAULT_MAX_MB * 1e6)
+
+
+def key_str(key) -> str:
+    """Stable hex digest of a compile-cache key tuple. The serialization
+    schema version is mixed in so artifacts written by an incompatible
+    PlanSpec layout are unreachable rather than mis-loaded."""
+    from repro.core.plan_api import _SAVE_VERSION, _SPEC_SCHEMA
+
+    h = hashlib.sha1()
+    h.update(f"v{_SAVE_VERSION}.{_SPEC_SCHEMA}|".encode())
+    h.update(repr(key).encode())
+    return h.hexdigest()
+
+
+def _path(keyhex: str) -> str:
+    return os.path.join(cache_dir(), f"{_PREFIX}{keyhex}.npz")
+
+
+def _entries(directory: str) -> list:
+    """(mtime, size, path) for every cache artifact in `directory`."""
+    out = []
+    try:
+        names = os.listdir(directory)
+    except OSError:
+        return out
+    for name in names:
+        if not (name.startswith(_PREFIX) and name.endswith(".npz")):
+            continue
+        p = os.path.join(directory, name)
+        try:
+            st = os.stat(p)
+        except OSError:
+            continue
+        out.append((st.st_mtime, st.st_size, p))
+    return out
+
+
+def load(keyhex: str):
+    """(spec, params) on hit — touching the artifact's mtime for LRU — or
+    None. Unreadable artifacts are deleted and count as misses."""
+    if not enabled():
+        return None
+    path = _path(keyhex)
+    if not os.path.exists(path):
+        _stats["misses"] += 1
+        return None
+    from repro.core.plan_api import load_plan
+
+    try:
+        spec, params = load_plan(path)
+        os.utime(path)  # LRU: a hit makes the artifact most-recently-used
+    except Exception:
+        _stats["errors"] += 1
+        _stats["misses"] += 1
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+        return None
+    _stats["hits"] += 1
+    return spec, params
+
+
+def store(keyhex: str, spec, params) -> None:
+    """Atomically write one artifact, then evict least-recently-used
+    artifacts until the directory is back under the size budget. Errors
+    (read-only dir, disk full, races) are swallowed: the cache is an
+    optimization, never a correctness dependency."""
+    if not enabled():
+        return
+    directory = cache_dir()
+    from repro.core.plan_api import save_plan
+
+    try:
+        os.makedirs(directory, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(suffix=".npz.tmp", dir=directory)
+        try:
+            os.close(fd)
+            save_plan(tmp, spec, params)
+            os.replace(tmp, _path(keyhex))
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+    except Exception:
+        _stats["errors"] += 1
+        return
+    _stats["stores"] += 1
+    _evict(directory)
+
+
+def _evict(directory: str) -> None:
+    budget = _max_bytes()
+    entries = sorted(_entries(directory))  # oldest mtime first
+    total = sum(size for _, size, _ in entries)
+    for _, size, path in entries:
+        if total <= budget:
+            break
+        try:
+            os.remove(path)
+        except OSError:
+            continue
+        total -= size
+        _stats["evictions"] += 1
+
+
+def clear() -> None:
+    """Remove every cache artifact (cache disabled -> no-op)."""
+    directory = cache_dir()
+    if directory is None:
+        return
+    for _, _, path in _entries(directory):
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+
+
+def stats() -> dict:
+    directory = cache_dir()
+    entries = _entries(directory) if directory else []
+    return {"dir": directory, "enabled": directory is not None,
+            "entries": len(entries),
+            "bytes": int(sum(size for _, size, _ in entries)),
+            "max_bytes": _max_bytes(), **_stats}

@@ -11,7 +11,20 @@
     # learnable tree metrics
     spec, params = ftfi.build(tree, reweightable=True)
     params = ftfi.reweight(spec, edge_w)             # differentiable in edge_w
+
+    # incremental edits: patch a compiled plan instead of rebuilding
+    spec, params = ftfi.update_plan(spec, params, [
+        ("insert_leaf", parent, w),   # new leaf under `parent`
+        ("delete_leaf", v),           # degree-1 vertex -> zeroed ghost row
+        ("reweight", edge_w),         # replace all edge weights
+    ])
+
+    # disk-persistent plan cache: set FTFI_PLAN_CACHE=/path (or call
+    # ftfi.plan_cache.configure(path)) and every build/Integrator over a
+    # known topology becomes one npz read; LRU-evicted past
+    # FTFI_PLAN_CACHE_MAX_MB (default 512)
 """
+from repro.core import plan_cache  # noqa: F401
 from repro.core.plan_api import (  # noqa: F401
     KERNEL_MODES, PlanParams, PlanSpec, apply, build, describe, fastmult,
-    load_plan, plan_from_spec, reweight, save_plan, specialize)
+    load_plan, plan_from_spec, reweight, save_plan, specialize, update_plan)

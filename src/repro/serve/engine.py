@@ -36,7 +36,13 @@ class ServeEngine:
         so topological-mask serving never rebuilds the IT at startup:
         square (patch-grid) plans are installed as the ViT grid integrator,
         and the provenance (content hash, seed, leaf_size) is surfaced in
-        `plan_banner()` for the serve log."""
+        `plan_banner()` for the serve log.
+
+        Plans compiled on demand (e.g. per-request topological masks going
+        through `compile_plan`) additionally consult the disk-persistent
+        plan cache when `FTFI_PLAN_CACHE` is configured, so even cold
+        engine processes serving recurring topologies skip the IT rebuild;
+        `plan_banner()` reports the cache status."""
         self.cfg = cfg
         self.params = params
         self.plan_spec = self.plan_params = None
@@ -72,10 +78,21 @@ class ServeEngine:
         self.queue: list[Request] = []
 
     def plan_banner(self) -> str:
-        """Provenance line for the serve log: which integration plan this
-        engine serves with, and where it came from."""
+        """Provenance lines for the serve log: which integration plan this
+        engine serves with, where it came from, and whether on-demand
+        compiles are backed by the disk plan cache."""
+        from repro.core import plan_cache
+
+        if plan_cache.enabled():
+            st = plan_cache.stats()
+            cache_line = (f"plan-cache: {st['dir']} "
+                          f"({st['entries']} entries, "
+                          f"{st['bytes'] / 1e6:.1f}/"
+                          f"{st['max_bytes'] / 1e6:.0f} MB)")
+        else:
+            cache_line = "plan-cache: disabled (set FTFI_PLAN_CACHE)"
         if self.plan_spec is None:
-            return "plan: none (no preloaded integration plan)"
+            return f"plan: none (no preloaded integration plan)\n{cache_line}"
         s = self.plan_spec
         if self.plan_grid_side is not None:
             status = (f"installed as {self.plan_grid_side}x"
@@ -87,7 +104,7 @@ class ServeEngine:
         return (f"plan: sha={s.fingerprint[:12]} seed={s.seed} "
                 f"leaf_size={s.leaf_size} n={s.n} trees={s.num_trees} "
                 f"grid_h={s.grid_h} reweightable={s.reweightable} "
-                f"({status})")
+                f"({status})\n{cache_line}")
 
     def submit(self, req: Request):
         self.queue.append(req)
