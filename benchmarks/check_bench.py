@@ -26,8 +26,21 @@ the fused forest plan. Fails (exit 1) when:
 stay within --topo-rel-err (default 1e-3) of its exactness anchor, and the
 fused impl must not be slower than the fft chunk-loop path it replaces.
 
+--suite robustness runs the live fault matrix (no input JSON) and writes it
+to --robustness-json (default BENCH_robustness.json). Fails when:
+  * plan-guard validation of a warm n=4000 plan costs more than
+    --guard-overhead (default 5%) of the warm-IT plan assembly time
+    (pre_plan_s), with a small absolute floor against timer noise;
+  * the degradation ladder's fallback output (pallas rung forced to fail)
+    diverges from the host oracle by more than --ladder-rel-err (1e-5);
+  * any fault-matrix row — corrupt artifact (truncated / bit-flipped),
+    flipped index, NaN field, kernel raise, non-finite kernel output,
+    post-write disk-cache corruption, serve slot/step crash — fails to
+    recover or degrade to the host-exact output.
+
   PYTHONPATH=src python -m benchmarks.check_bench BENCH_ftfi_runtime.json
   PYTHONPATH=src python -m benchmarks.check_bench --suite topo BENCH_topo_attention.json
+  PYTHONPATH=src python -m benchmarks.check_bench --suite robustness
 """
 from __future__ import annotations
 
@@ -215,10 +228,218 @@ def check_topo_json(path: str, max_rel_err: float) -> list[str]:
     return errors
 
 
+def check_robustness(out_path: str, guard_overhead: float,
+                     ladder_rel_err: float) -> list[str]:
+    """Live robustness gate + fault-matrix artifact. Every row must either
+    recover (retry reproduces the answer) or degrade to the host-exact
+    output; the artifact records what happened for each fault class."""
+    import tempfile
+    import warnings
+
+    import numpy as np
+    from repro import ftfi
+    from repro.core import clear_flat_cache, clear_plan_cache
+    from repro.core import cordial as C
+    from repro.core import ladder, plan_cache, plan_guard
+    from repro.core.itree_flat import build_flat_it
+    from repro.core.plan_guard import PlanValidationError
+    from repro.graphs.graph import synthetic_graph
+    from repro.graphs.mst import minimum_spanning_tree
+    from repro.testing import faults
+
+    errors: list[str] = []
+    rows: list[dict] = []
+
+    def row(fault: str, recovered: bool, outcome: str,
+            rel_err: float | None = None, **extra) -> None:
+        rows.append({"fault": fault, "recovered": bool(recovered),
+                     "outcome": outcome, "rel_err": rel_err, **extra})
+        if not recovered:
+            errors.append(f"robustness matrix: {fault}: {outcome}")
+
+    # -- validation overhead vs warm plan assembly (the pre_plan_s analogue:
+    # cold plan assembly on a warm flat-IT cache, min over rounds)
+    tree = minimum_spanning_tree(synthetic_graph(4000, 2000, seed=1))
+    build_flat_it(tree, leaf_size=256)
+    t_plan = float("inf")
+    for _ in range(3):
+        clear_plan_cache()
+        t0 = time.perf_counter()
+        ftfi.build(tree, leaf_size=256)
+        t_plan = min(t_plan, time.perf_counter() - t0)
+    spec, params = ftfi.build(tree, leaf_size=256)
+    t_val = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        issues = plan_guard.check_spec(spec, params)
+        t_val = min(t_val, time.perf_counter() - t0)
+    if issues:
+        errors.append(f"robustness: healthy n=4000 plan failed validation: "
+                      f"{issues[:3]}")
+    budget = max(guard_overhead * t_plan, 2e-3)  # 2ms timer-noise floor
+    if t_val > budget:
+        errors.append(
+            f"robustness: plan-guard validation {t_val*1e3:.2f}ms > "
+            f"{guard_overhead:.0%} of warm pre_plan_s "
+            f"({t_plan*1e3:.2f}ms)")
+    rows.append({"fault": "none (overhead)", "recovered": t_val <= budget,
+                 "outcome": f"validation {t_val*1e3:.3f}ms on warm "
+                            f"pre_plan_s {t_plan*1e3:.2f}ms",
+                 "rel_err": None, "validate_s": t_val, "pre_plan_s": t_plan})
+
+    fn = C.Exponential(-0.5)
+    X = np.random.default_rng(0).normal(size=(spec.n, 4)).astype(np.float32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        ref = np.asarray(ftfi.apply(spec, params, fn, X, backend="host"))
+
+        # -- ladder: forced kernel raise -> fallback parity vs host oracle
+        ladder.reset_stats()
+        with faults.injected("ladder.pallas", faults.always_raise(
+                RuntimeError, "injected kernel launch failure")):
+            got = np.asarray(ftfi.apply_resilient(spec, params, fn, X,
+                                                  backend="pallas"))
+        err = float(np.max(np.abs(got - ref)) / max(np.max(np.abs(ref)),
+                                                    1e-12))
+        st = ladder.stats()
+        ok = err <= ladder_rel_err and st["demotions"] >= 1
+        row("kernel raise (ladder.pallas)", ok,
+            f"demoted {st['demotions']}x, rel_err {err:.1e} vs host",
+            rel_err=err)
+        if err > ladder_rel_err:
+            errors.append(f"robustness: ladder fallback rel_err {err:.2e} > "
+                          f"{ladder_rel_err:.0e} vs host oracle")
+
+        # -- ladder: non-finite kernel output -> demotes through to parity
+        with faults.injected("ladder.out.pallas", faults.nan_output()):
+            got = np.asarray(ftfi.apply_resilient(spec, params, fn, X,
+                                                  backend="pallas"))
+        err = float(np.max(np.abs(got - ref)) / max(np.max(np.abs(ref)),
+                                                    1e-12))
+        row("non-finite kernel output (ladder.out.pallas)",
+            err <= ladder_rel_err,
+            f"rel_err {err:.1e} vs host after demotion", rel_err=err)
+
+    # -- corrupt artifact: truncated / bit-flipped npz must be rejected
+    with tempfile.TemporaryDirectory() as d:
+        p = pathlib.Path(d) / "plan.npz"
+        ftfi.save_plan(p, spec, params)
+        blob = p.read_bytes()
+        for fault, corrupt in (
+                ("truncated artifact",
+                 lambda: faults.corrupt_file(p, truncate_to=len(blob) // 2)),
+                ("bit-flipped artifact",
+                 lambda: faults.corrupt_file(p, flip_bytes=64, seed=7))):
+            p.write_bytes(blob)
+            corrupt()
+            try:
+                ftfi.load_plan(p)
+                row(fault, False, "load_plan accepted a damaged artifact")
+            except PlanValidationError as e:
+                row(fault, True, f"rejected: {str(e)[:80]}")
+            except Exception as e:  # anything else is an unhandled leak
+                row(fault, False,
+                    f"unstructured {type(e).__name__}: {str(e)[:80]}")
+
+    # -- flipped index / NaN field caught by the guard before dispatch
+    bad = faults.flip_index(spec, field="src_gather")
+    try:
+        ftfi.validate(bad, params)
+        row("flipped index (src_gather)", False, "guard missed OOB index")
+    except PlanValidationError as e:
+        row("flipped index (src_gather)", True, f"rejected: {str(e)[:80]}")
+    import dataclasses
+    dists = list(params.cross_src_d)
+    if dists:
+        d0 = np.array(dists[0], copy=True)
+        d0.reshape(-1)[:1] = np.nan
+        nan_params = dataclasses.replace(
+            params, cross_src_d=(d0,) + tuple(dists[1:]))
+        try:
+            ftfi.validate(spec, nan_params)
+            row("NaN field (cross_src_d)", False, "guard missed NaN params")
+        except PlanValidationError as e:
+            row("NaN field (cross_src_d)", True, f"rejected: {str(e)[:80]}")
+
+    # -- disk cache post-write corruption: strict reject -> rebuild
+    with tempfile.TemporaryDirectory() as d:
+        plan_cache.configure(d, max_mb=64)
+        try:
+            clear_flat_cache()
+            clear_plan_cache()
+            ftfi.build(tree, leaf_size=64)
+            [artifact] = list(pathlib.Path(d).glob("ftfi-plan-*.npz"))
+            faults.corrupt_file(artifact, flip_bytes=48, seed=3)
+            clear_flat_cache()
+            clear_plan_cache()
+            before = plan_cache.stats()
+            spec2, pp2 = ftfi.build(tree, leaf_size=64)
+            after = plan_cache.stats()
+            ok = (after["misses"] > before["misses"]
+                  and after["errors"] > before["errors"]
+                  and plan_guard.check_spec(spec2, pp2) == [])
+            row("disk-cache post-write corruption", ok,
+                f"hit rejected -> rebuilt (errors +"
+                f"{after['errors'] - before['errors']})")
+        except Exception as e:
+            row("disk-cache post-write corruption", False,
+                f"unhandled {type(e).__name__}: {str(e)[:80]}")
+        finally:
+            plan_cache.reset_to_env()
+            clear_flat_cache()
+            clear_plan_cache()
+
+    # -- serving: slot crash at tick k and a whole-step crash must both
+    # complete every request with retries recorded, zero exceptions
+    try:
+        import jax
+        from repro.configs.base import get_smoke_config
+        from repro.models import api
+        from repro.serve.engine import Request, ServeEngine
+
+        cfg = get_smoke_config("qwen2_1_5b").replace(dtype="float32")
+        mp = api.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, size=k).tolist()
+                   for k in (3, 5)]
+        for fault, point, handler in (
+                ("serve slot crash (NaN logits row @ tick 2)",
+                 "serve.logits", faults.nan_slot_at_tick(slot=1, k=2)),
+                ("serve step crash (raise @ tick 3)",
+                 "serve.step", faults.raise_at_tick(3))):
+            eng = ServeEngine(cfg, mp, batch_slots=2, max_len=64)
+            reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+                    for i, p in enumerate(prompts)]
+            for r in reqs:
+                eng.submit(r)
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                with faults.injected(point, handler):
+                    eng.run()
+            st = eng.stats()
+            ok = (all(r.done and r.error is None for r in reqs)
+                  and st["retries"] >= 1 and st["failed"] == 0)
+            row(fault, ok,
+                f"completed={st['completed']} retries={st['retries']} "
+                f"evictions={st['evictions']}", engine_stats={
+                    k: st[k] for k in ("completed", "failed", "retries",
+                                       "evictions", "step_failures",
+                                       "slot_faults")})
+    except Exception as e:
+        row("serve fault rows", False,
+            f"unhandled {type(e).__name__}: {str(e)[:120]}")
+
+    with open(out_path, "w") as fh:
+        json.dump({"suite": "robustness", "rows": rows}, fh, indent=2)
+    print(f"wrote {out_path} ({len(rows)} fault-matrix rows)")
+    return errors
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("json", nargs="?", default="BENCH_ftfi_runtime.json")
-    ap.add_argument("--suite", choices=("ftfi", "topo"), default="ftfi")
+    ap.add_argument("--suite", choices=("ftfi", "topo", "robustness"),
+                    default="ftfi")
     ap.add_argument("--max-rel-err", type=float, default=1e-4)
     ap.add_argument("--it-n", type=int, default=2000)
     ap.add_argument("--it-ceiling", type=float, default=5.0)
@@ -234,9 +455,21 @@ def main() -> None:
     ap.add_argument("--cache-warm-ceiling", type=float, default=2.0,
                     help="max seconds for a cold-process rebuild served "
                     "from a populated disk plan cache")
+    ap.add_argument("--guard-overhead", type=float, default=0.05,
+                    help="max plan-guard validation time as a fraction of "
+                    "the warm-IT plan assembly time (pre_plan_s)")
+    ap.add_argument("--ladder-rel-err", type=float, default=1e-5,
+                    help="max rel_err of a ladder fallback output vs the "
+                    "host oracle")
+    ap.add_argument("--robustness-json", default="BENCH_robustness.json",
+                    help="fault-matrix artifact written by "
+                    "--suite robustness")
     args = ap.parse_args()
 
-    if args.suite == "topo":
+    if args.suite == "robustness":
+        errors = check_robustness(args.robustness_json, args.guard_overhead,
+                                  args.ladder_rel_err)
+    elif args.suite == "topo":
         errors = check_topo_json(args.json, args.topo_rel_err)
     else:
         errors = check_json(args.json, args.max_rel_err)

@@ -19,6 +19,12 @@ from repro.core.engines import (  # noqa: F401
 from repro.core.plan_api import (  # noqa: F401
     PlanParams, PlanSpec,
 )
+from repro.core.plan_guard import (  # noqa: F401
+    PlanGuardWarning, PlanValidationError,
+)
+from repro.core.ladder import (  # noqa: F401
+    BackendDemotionWarning, LadderExhaustedError,
+)
 from repro.core.integrator_tree import build_integrator_tree, it_stats  # noqa: F401
 from repro.core.toeplitz import (  # noqa: F401
     causal_toeplitz_matvec, symmetric_toeplitz_matvec, toeplitz_dense,

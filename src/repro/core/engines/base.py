@@ -89,12 +89,17 @@ class Integrator:
         """Facade over a functional (spec, params) pair — e.g. an
         `ftfi.load_plan` artifact. Never touches the IT/plan builders, so a
         serving restart pays one file read instead of an O(N log N)
-        decomposition."""
+        decomposition. The pair is passed through the plan guard first
+        (FTFI_PLAN_GUARD policy): this is the other door untrusted
+        artifacts enter through, and the fused executor does no bounds
+        checking of its own."""
         if backend not in ("plan", "pallas"):
             raise ValueError(
                 f"from_plan supports the plan/pallas backends, not "
                 f"{backend!r} (the host backend has no plan to load)")
-        from repro.core import plan_api
+        from repro.core import plan_api, plan_guard
+
+        plan_guard.validate(spec, params, where="Integrator.from_plan")
 
         obj = cls.__new__(cls)
         obj.backend = backend

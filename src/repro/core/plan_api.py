@@ -731,41 +731,65 @@ def save_plan(path, spec: PlanSpec, params: PlanParams) -> None:
         np.savez_compressed(fh, **arrays)
 
 
-def load_plan(path):
+def load_plan(path, validate: bool = True):
     """Deserialize a `save_plan` artifact -> (spec, params). Never touches
     the IT/plan builders: serving restarts pay one file read, not an
-    O(N log N) decomposition."""
-    with np.load(path, allow_pickle=False) as z:
-        meta = json.loads(str(z["__meta__"][()]))
-        if meta.get("version") != _SAVE_VERSION:
-            raise ValueError(f"unsupported plan artifact version: "
-                             f"{meta.get('version')!r}")
-        kwargs: dict = {}
-        for name in _SPEC_SCALAR_FIELDS:
-            val = meta[name]
-            if isinstance(val, list):
-                val = tuple(val)
-            kwargs[name] = val
-        for name in _SPEC_ARRAY_FIELDS:
-            kwargs[name] = (z[f"s_{name}"]
-                            if meta.get(f"has_{name}", False) else None)
-        for name in _SPEC_TUPLE_FIELDS:
-            ln = meta[f"len_{name}"]
-            kwargs[name] = (None if ln < 0 else
-                            tuple(z[f"s_{name}_{i}"] for i in range(ln)))
-        spec = PlanSpec(**kwargs)
-        nb = meta["len_cross_tgt_d0"]
-        nl = meta["len_leaf_dists0"]
-        params = PlanParams(
-            cross_tgt_d=tuple(jnp.asarray(z[f"p_cross_tgt_d_{i}"])
-                              for i in range(nb)),
-            cross_src_d=tuple(jnp.asarray(z[f"p_cross_src_d_{i}"])
-                              for i in range(nb)),
-            leaf_dists=tuple(jnp.asarray(z[f"p_leaf_dists_{i}"])
-                             for i in range(nl)),
-            tree_w=(jnp.asarray(z["p_tree_w"]) if meta["has_tree_w"]
-                    else None),
-        )
+    O(N log N) decomposition.
+
+    The artifact is UNTRUSTED input (disk cache, registry download, operator
+    handoff): a truncated/bit-flipped file raises a clear
+    `PlanValidationError` instead of feeding garbage indices to the fused
+    executor. `validate=True` (default) additionally runs the full
+    `plan_guard` bounds/consistency pass under the configured policy;
+    malformed-container errors (torn zip, missing members, bad metadata)
+    always raise `PlanValidationError` regardless of policy."""
+    from repro.core.plan_guard import PlanValidationError
+
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["__meta__"][()]))
+            if meta.get("version") != _SAVE_VERSION:
+                raise PlanValidationError(
+                    f"unsupported plan artifact version: "
+                    f"{meta.get('version')!r}")
+            kwargs: dict = {}
+            for name in _SPEC_SCALAR_FIELDS:
+                val = meta[name]
+                if isinstance(val, list):
+                    val = tuple(val)
+                kwargs[name] = val
+            for name in _SPEC_ARRAY_FIELDS:
+                kwargs[name] = (z[f"s_{name}"]
+                                if meta.get(f"has_{name}", False) else None)
+            for name in _SPEC_TUPLE_FIELDS:
+                ln = meta[f"len_{name}"]
+                kwargs[name] = (None if ln < 0 else
+                                tuple(z[f"s_{name}_{i}"] for i in range(ln)))
+            spec = PlanSpec(**kwargs)
+            nb = meta["len_cross_tgt_d0"]
+            nl = meta["len_leaf_dists0"]
+            params = PlanParams(
+                cross_tgt_d=tuple(jnp.asarray(z[f"p_cross_tgt_d_{i}"])
+                                  for i in range(nb)),
+                cross_src_d=tuple(jnp.asarray(z[f"p_cross_src_d_{i}"])
+                                  for i in range(nb)),
+                leaf_dists=tuple(jnp.asarray(z[f"p_leaf_dists_{i}"])
+                                 for i in range(nl)),
+                tree_w=(jnp.asarray(z["p_tree_w"]) if meta["has_tree_w"]
+                        else None),
+            )
+    except PlanValidationError:
+        raise
+    except Exception as e:
+        # torn zip / missing npz member / mangled json / wrong dtype: one
+        # clear error class so callers (disk cache, serving) reject cleanly
+        raise PlanValidationError(
+            f"load_plan({path!s}): corrupt or truncated plan artifact "
+            f"({type(e).__name__}: {e})") from e
+    if validate:
+        from repro.core import plan_guard
+
+        plan_guard.validate(spec, params, where=f"load_plan({path!s})")
     return spec, params
 
 

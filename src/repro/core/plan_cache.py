@@ -11,7 +11,9 @@ Configuration (environment, overridable programmatically):
   FTFI_PLAN_CACHE          cache directory; unset/empty -> cache disabled
   FTFI_PLAN_CACHE_MAX_MB   total size budget in MB (default 512); the
                            least-recently-USED artifacts (hits touch mtime)
-                           are evicted once the budget is exceeded
+                           are evicted once the budget is exceeded.
+                           Non-numeric or non-positive values warn once
+                           and fall back to the default, never crash.
 
 Artifacts are the standard `save_plan` npz format keyed by a sha1 over the
 full compile key (content fingerprint(s), leaf_size, seed, grid detection,
@@ -25,6 +27,7 @@ from __future__ import annotations
 import hashlib
 import os
 import tempfile
+import warnings
 
 _ENV_DIR = "FTFI_PLAN_CACHE"
 _ENV_MAX_MB = "FTFI_PLAN_CACHE_MAX_MB"
@@ -34,8 +37,9 @@ _PREFIX = "ftfi-plan-"
 _UNSET = object()
 _dir_override: object = _UNSET
 _max_mb_override: object = _UNSET
+_warned_max_mb: str | None = None
 _stats = {"hits": 0, "misses": 0, "stores": 0, "evictions": 0,
-          "errors": 0}
+          "errors": 0, "validation_rejects": 0}
 
 
 def configure(directory, max_mb: float | None = None) -> None:
@@ -68,10 +72,26 @@ def enabled() -> bool:
 def _max_bytes() -> int:
     if _max_mb_override is not _UNSET:
         return int(float(_max_mb_override) * 1e6)  # type: ignore[arg-type]
-    try:
-        return int(float(os.environ.get(_ENV_MAX_MB, _DEFAULT_MAX_MB)) * 1e6)
-    except ValueError:
+    raw = os.environ.get(_ENV_MAX_MB)
+    if raw is None:
         return int(_DEFAULT_MAX_MB * 1e6)
+    # defensive parse: an operator typo in the env must degrade to the
+    # default budget with one warning, never crash the serving process or
+    # silently evict everything (a negative/zero budget would)
+    global _warned_max_mb
+    try:
+        mb = float(raw)
+        if mb <= 0 or mb != mb:  # reject <= 0 and NaN
+            raise ValueError(f"non-positive budget {mb!r}")
+    except ValueError as e:
+        if _warned_max_mb != raw:  # warn once per distinct bad value
+            _warned_max_mb = raw
+            warnings.warn(
+                f"{_ENV_MAX_MB}={raw!r} is not a positive number ({e}); "
+                f"using the default {_DEFAULT_MAX_MB:.0f} MB budget",
+                UserWarning, stacklevel=2)
+        return int(_DEFAULT_MAX_MB * 1e6)
+    return int(mb * 1e6)
 
 
 def key_str(key) -> str:
@@ -119,11 +139,22 @@ def load(keyhex: str):
         _stats["misses"] += 1
         return None
     from repro.core.plan_api import load_plan
+    from repro.core.plan_guard import PlanValidationError
 
     try:
-        spec, params = load_plan(path)
+        # load_plan runs the full plan_guard pass in "strict" mode here
+        # regardless of the global policy: a cache hit has a free fallback
+        # (rebuild), so a bad artifact is ALWAYS a miss, never an executor
+        # input — counted separately from torn-file errors
+        spec, params = load_plan(path, validate=False)
+        from repro.core import plan_guard
+
+        plan_guard.validate(spec, params, where=f"plan_cache({path})",
+                            policy_override="strict")
         os.utime(path)  # LRU: a hit makes the artifact most-recently-used
-    except Exception:
+    except Exception as e:
+        if isinstance(e, PlanValidationError):
+            _stats["validation_rejects"] += 1
         _stats["errors"] += 1
         _stats["misses"] += 1
         try:
@@ -151,6 +182,15 @@ def store(keyhex: str, spec, params) -> None:
         try:
             os.close(fd)
             save_plan(tmp, spec, params)
+            # fsync BEFORE the atomic rename: without it a hard kill can
+            # leave a fully-renamed but truncated artifact (the rename can
+            # hit disk before the data does), which would then be served as
+            # a "valid" cache file until the guard rejects it
+            fd = os.open(tmp, os.O_RDONLY)
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
             os.replace(tmp, _path(keyhex))
         finally:
             if os.path.exists(tmp):

@@ -1,0 +1,318 @@
+"""Plan-artifact validation: the trust boundary in front of the executor.
+
+`ftfi.load_plan`, the disk plan cache, and `ftfi.update_plan` all hand
+index arrays to the fused gather/segment-sum/scatter dispatch, which does
+ZERO bounds checking — a bit-flipped `src_gather` entry silently reads
+garbage (or traps) instead of failing loudly. `check_spec(spec, params)`
+bounds-checks every index array against its target extent, verifies
+bucket-offset monotonicity and mask/shape agreement, ghost-mask
+consistency, reweight/update-table coherence, and schema/fingerprint
+integrity; `validate(...)` applies the policy knob:
+
+  strict   (default) raise `PlanValidationError` on the first bad artifact
+  warn     log a `PlanGuardWarning` and report failure (caller rejects/
+           demotes: the disk cache treats it as a miss and rebuilds)
+  off      skip validation entirely (trusted artifacts, benchmarking)
+
+The policy comes from `FTFI_PLAN_GUARD` (env) or `set_policy(...)`;
+`stats()` exposes the counters the serve banner surfaces. Every check is a
+vectorized single pass (min/max/any), so validating costs a few percent of
+plan *assembly* — see `check_bench --suite robustness`, which gates the
+overhead at <= 5% of a warm `pre_plan_s`.
+"""
+from __future__ import annotations
+
+import os
+import warnings
+
+import numpy as np
+
+_ENV_POLICY = "FTFI_PLAN_GUARD"
+_POLICIES = ("strict", "warn", "off")
+_policy_override: str | None = None
+
+_stats = {"validations": 0, "failures": 0, "raised": 0, "warned": 0}
+
+
+class PlanValidationError(ValueError):
+    """A plan artifact failed validation: its index arrays, bucket layout,
+    or metadata are inconsistent and MUST NOT reach the fused executor."""
+
+
+class PlanGuardWarning(UserWarning):
+    """Non-strict policy: a plan artifact failed validation and was
+    rejected (rebuilt/demoted) instead of raising."""
+
+
+def set_policy(policy: str | None) -> None:
+    """Programmatic policy override; `None` follows FTFI_PLAN_GUARD again."""
+    global _policy_override
+    if policy is not None and policy not in _POLICIES:
+        raise ValueError(f"unknown plan-guard policy {policy!r}; "
+                         f"expected one of {_POLICIES}")
+    _policy_override = policy
+
+
+def policy() -> str:
+    if _policy_override is not None:
+        return _policy_override
+    p = os.environ.get(_ENV_POLICY, "strict").strip().lower()
+    return p if p in _POLICIES else "strict"
+
+
+def stats() -> dict:
+    return dict(_stats)
+
+
+def reset_stats() -> None:
+    for k in _stats:
+        _stats[k] = 0
+
+
+# ----------------------------------------------------------------------------
+# checks (pure: return a list of issue strings, never raise)
+# ----------------------------------------------------------------------------
+
+
+def _idx_in(name, arr, lo, hi, issues):
+    """All entries of integer array `arr` in [lo, hi)? One min/max pass."""
+    if arr is None or arr.size == 0:
+        return
+    if not np.issubdtype(arr.dtype, np.integer):
+        issues.append(f"{name}: dtype {arr.dtype} is not integral")
+        return
+    mn, mx = int(arr.min()), int(arr.max())
+    if mn < lo or mx >= hi:
+        issues.append(f"{name}: values span [{mn}, {mx}] outside the valid "
+                      f"range [{lo}, {hi})")
+
+
+def _offsets_ok(name, offs, masks, total, issues):
+    """Bucket offsets must be the exact running sum of B_i * U_i (monotone
+    by construction) and `total` their final value."""
+    if len(offs) != len(masks):
+        issues.append(f"{name}: {len(offs)} offsets for {len(masks)} buckets")
+        return
+    expect = 0
+    for i, (off, m) in enumerate(zip(offs, masks)):
+        if int(off) != expect:
+            issues.append(f"{name}[{i}]: offset {int(off)} != running flat "
+                          f"size {expect} (non-monotonic or corrupt layout)")
+            return
+        expect += int(m.shape[0]) * int(m.shape[1])
+    if int(total) != expect:
+        issues.append(f"{name}: group total {int(total)} != flat layout "
+                      f"size {expect}")
+
+
+def check_spec(spec, params=None, max_issues: int = 16) -> list[str]:
+    """Every inconsistency that could make the fused executor read or write
+    out of bounds (or silently mis-integrate), as human-readable strings.
+    Purely host-side numpy; does not raise."""
+    issues: list[str] = []
+
+    def done() -> bool:
+        return len(issues) >= max_issues
+
+    # -- schema / provenance integrity --------------------------------------
+    n = spec.n
+    if not isinstance(n, (int, np.integer)) or n < 1:
+        issues.append(f"n={n!r}: not a positive integer")
+        return issues  # nothing below is meaningful
+    if not (isinstance(spec.fingerprint, str) and spec.fingerprint
+            and all(c in "0123456789abcdef" for c in spec.fingerprint)):
+        issues.append(f"fingerprint {spec.fingerprint!r}: not a hex digest")
+    if len(spec.tree_sizes) != spec.num_trees:
+        issues.append(f"num_trees={spec.num_trees} but "
+                      f"{len(spec.tree_sizes)} tree_sizes")
+    if sum(int(t) for t in spec.tree_sizes) != n:
+        issues.append(f"tree_sizes sum {sum(spec.tree_sizes)} != n={n}")
+    nb = len(spec.cross_tgt_mask)
+    nl = len(spec.leaf_ids)
+    for name, want in (("cross_src_mask", nb), ("cross_tgt_d0", nb),
+                       ("cross_src_d0", nb), ("leaf_mask", nl),
+                       ("leaf_dists0", nl)):
+        if len(getattr(spec, name)) != want:
+            issues.append(f"{name}: {len(getattr(spec, name))} buckets, "
+                          f"expected {want}")
+    if done():
+        return issues
+
+    # -- per-bucket shape agreement -----------------------------------------
+    for i in range(nb):
+        tm, sm = spec.cross_tgt_mask[i], spec.cross_src_mask[i]
+        if tm.dtype != bool or sm.dtype != bool:
+            issues.append(f"cross bucket {i}: masks are not boolean")
+        if tm.shape[0] != sm.shape[0]:
+            issues.append(f"cross bucket {i}: tgt rows {tm.shape[0]} != "
+                          f"src rows {sm.shape[0]}")
+        if spec.cross_tgt_d0[i].shape != tm.shape:
+            issues.append(f"cross bucket {i}: tgt_d0 shape "
+                          f"{spec.cross_tgt_d0[i].shape} != mask {tm.shape}")
+        if spec.cross_src_d0[i].shape != sm.shape:
+            issues.append(f"cross bucket {i}: src_d0 shape "
+                          f"{spec.cross_src_d0[i].shape} != mask {sm.shape}")
+        if done():
+            return issues
+    for i in range(nl):
+        ids, m, d = spec.leaf_ids[i], spec.leaf_mask[i], spec.leaf_dists0[i]
+        B, K = ids.shape
+        if m.shape != (B, K) or m.dtype != bool:
+            issues.append(f"leaf bucket {i}: mask shape/dtype mismatch")
+        if d.shape != (B, K, K):
+            issues.append(f"leaf bucket {i}: dists shape {d.shape} != "
+                          f"({B}, {K}, {K})")
+        _idx_in(f"leaf_ids[{i}]", ids, 0, n + 1, issues)
+        if m.shape == ids.shape and ids.size and m.any():
+            live_max = int(ids[m].max()) if m.any() else -1
+            if live_max >= n:
+                issues.append(f"leaf_ids[{i}]: live (unmasked) slot points "
+                              f"at pad row {live_max} >= n={n}")
+        if done():
+            return issues
+
+    # -- bucket-offset monotonicity / flat-layout totals --------------------
+    _offsets_ok("cross_src_off", spec.cross_src_off, spec.cross_src_mask,
+                spec.n_src_groups, issues)
+    _offsets_ok("cross_tgt_off", spec.cross_tgt_off, spec.cross_tgt_mask,
+                spec.n_tgt_groups, issues)
+    if done():
+        return issues
+
+    # -- fused executor index arrays: every gather/scatter bounds-checked ---
+    # gather FROM Xpad (n+1 rows incl. the pad row) / scatter INTO out (same)
+    _idx_in("pivots", spec.pivots, 0, n + 1, issues)
+    _idx_in("src_gather", spec.src_gather, 0, n + 1, issues)
+    _idx_in("tgt_scatter", spec.tgt_scatter, 0, n + 1, issues)
+    # segment/group ids against their group extents
+    _idx_in("src_seg", spec.src_seg, 0, max(spec.n_src_groups, 1), issues)
+    _idx_in("tgt_gather", spec.tgt_gather, 0, max(spec.n_tgt_groups, 1),
+            issues)
+    if spec.src_gather.shape != spec.src_seg.shape:
+        issues.append(f"src_gather/src_seg length mismatch: "
+                      f"{spec.src_gather.shape} vs {spec.src_seg.shape}")
+    if spec.tgt_gather.shape != spec.tgt_scatter.shape:
+        issues.append(f"tgt_gather/tgt_scatter length mismatch: "
+                      f"{spec.tgt_gather.shape} vs {spec.tgt_scatter.shape}")
+    if done():
+        return issues
+
+    # -- ghost-mask consistency ---------------------------------------------
+    if spec.ghosts is not None and spec.ghosts.size:
+        _idx_in("ghosts", spec.ghosts, 0, n, issues)
+        g = np.unique(spec.ghosts)
+        if g.size != spec.ghosts.size:
+            issues.append("ghosts: duplicated vertex ids")
+        for name, arr in (("src_gather", spec.src_gather),
+                          ("tgt_scatter", spec.tgt_scatter)):
+            if arr.size and np.isin(arr, g).any():
+                issues.append(f"{name}: references deleted (ghost) vertices "
+                              "— their rows must carry no flat entries")
+        for i in range(nl):
+            m = spec.leaf_mask[i]
+            if m.any() and np.isin(spec.leaf_ids[i][m], g).any():
+                issues.append(f"leaf_ids[{i}]: live slot references a ghost")
+        if done():
+            return issues
+
+    # -- reweight tables ----------------------------------------------------
+    if spec.path_rows is not None:
+        _idx_in("path_rows", spec.path_rows, 0, n, issues)
+        _idx_in("path_edges", spec.path_edges, 0, max(spec.num_edges, 1),
+                issues)
+        if spec.path_rows.shape != spec.path_edges.shape:
+            issues.append("path_rows/path_edges length mismatch")
+        for name in ("cross_piv", "cross_tgt_rep", "cross_tgt_lca",
+                     "cross_src_rep", "cross_src_lca", "leaf_lca"):
+            val = getattr(spec, name)
+            if val is None:
+                issues.append(f"{name}: missing on a reweightable spec")
+                continue
+            for i, a in enumerate(val):
+                _idx_in(f"{name}[{i}]", a, 0, n + 1, issues)
+                if done():
+                    return issues
+    if spec.edges_u is not None:
+        for name in ("edges_u", "edges_v"):
+            a = getattr(spec, name)
+            if a.shape[0] != spec.num_edges:
+                issues.append(f"{name}: {a.shape[0]} entries != "
+                              f"num_edges={spec.num_edges}")
+            _idx_in(name, a, 0, n, issues)
+        if spec.edge_w0 is not None and np.asarray(spec.edge_w0).size:
+            w = np.asarray(spec.edge_w0)
+            if not np.isfinite(w).all():
+                issues.append("edge_w0: non-finite edge weights")
+
+    # -- update tables ------------------------------------------------------
+    if spec.children is not None:
+        num_internal = spec.children.shape[0]
+        if spec.pivots.shape[0] != num_internal:
+            issues.append(f"children: {num_internal} internal nodes but "
+                          f"{spec.pivots.shape[0]} pivots")
+        if spec.job_bucket is not None:
+            _idx_in("job_bucket", spec.job_bucket, 0, max(nb, 1), issues)
+        if spec.leaf_bucket is not None:
+            _idx_in("leaf_bucket", spec.leaf_bucket, 0, max(nl, 1), issues)
+    if done():
+        return issues
+
+    # -- params: the dynamic half must match the static layout --------------
+    if params is not None:
+        for name, want in (("cross_tgt_d", nb), ("cross_src_d", nb),
+                           ("leaf_dists", nl)):
+            val = getattr(params, name)
+            if len(val) != want:
+                issues.append(f"params.{name}: {len(val)} buckets, "
+                              f"expected {want}")
+                continue
+            shapes = ([m.shape for m in spec.cross_tgt_mask],
+                      [m.shape for m in spec.cross_src_mask],
+                      [d.shape for d in spec.leaf_dists0])[
+                          ("cross_tgt_d", "cross_src_d",
+                           "leaf_dists").index(name)]
+            for i, a in enumerate(val):
+                a = np.asarray(a)
+                if tuple(a.shape) != tuple(shapes[i]):
+                    issues.append(f"params.{name}[{i}]: shape {a.shape} != "
+                                  f"spec layout {tuple(shapes[i])}")
+                elif not np.isfinite(a).all():
+                    # masked/pad slots legitimately carry garbage values but
+                    # never non-finite ones: NaN * 0-mass still poisons sums
+                    issues.append(f"params.{name}[{i}]: non-finite distances")
+                if done():
+                    return issues
+        if params.tree_w is not None:
+            tw = np.asarray(params.tree_w)
+            if tw.shape != (spec.num_trees,):
+                issues.append(f"params.tree_w: shape {tw.shape} != "
+                              f"({spec.num_trees},)")
+            elif not np.isfinite(tw).all():
+                issues.append("params.tree_w: non-finite weights")
+    return issues
+
+
+def validate(spec, params=None, *, where: str = "plan",
+             policy_override: str | None = None) -> bool:
+    """Apply the policy to `check_spec`: True = safe to execute.
+
+    strict -> raise PlanValidationError; warn -> PlanGuardWarning + False
+    (callers reject: cache miss, load failure, demotion); off -> True
+    without checking."""
+    pol = policy_override if policy_override is not None else policy()
+    if pol == "off":
+        return True
+    _stats["validations"] += 1
+    issues = check_spec(spec, params)
+    if not issues:
+        return True
+    _stats["failures"] += 1
+    msg = (f"{where}: plan artifact failed validation "
+           f"({len(issues)} issue{'s' if len(issues) > 1 else ''}):\n  "
+           + "\n  ".join(issues))
+    if pol == "strict":
+        _stats["raised"] += 1
+        raise PlanValidationError(msg)
+    _stats["warned"] += 1
+    warnings.warn(msg, PlanGuardWarning, stacklevel=2)
+    return False

@@ -558,4 +558,11 @@ def update_plan(spec, params, ops):
             (st.fingerprint + repr((kind,) + tuple(
                 np.asarray(a).tolist() if isinstance(a, np.ndarray) else a
                 for a in op[1:]))).encode()).hexdigest()
-    return st.finish(spec, params)
+    new_spec, new_params = st.finish(spec, params)
+    # the patched plan feeds the same unchecked fused dispatch as a loaded
+    # artifact: bounds/consistency-check it under the plan_guard policy
+    # before anyone executes it
+    from repro.core import plan_guard
+
+    plan_guard.validate(new_spec, new_params, where="update_plan")
+    return new_spec, new_params

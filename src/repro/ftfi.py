@@ -23,8 +23,20 @@
     # ftfi.plan_cache.configure(path)) and every build/Integrator over a
     # known topology becomes one npz read; LRU-evicted past
     # FTFI_PLAN_CACHE_MAX_MB (default 512)
+
+    # robustness layer (see README "Failure modes and the degradation
+    # ladder"): artifacts are validated on load/cache-hit/update under the
+    # FTFI_PLAN_GUARD policy (strict|warn|off), and the resilient entry
+    # points demote pallas -> plan -> host on kernel failure or non-finite
+    # output instead of crashing
+    ftfi.validate(spec, params)                      # PlanValidationError
+    Y = ftfi.apply_resilient(spec, params, fn, X, backend="pallas")
+    fm = ftfi.resilient_fastmult(spec, fn)           # sticky demotions
 """
-from repro.core import plan_cache  # noqa: F401
+from repro.core import ladder, plan_cache, plan_guard  # noqa: F401
+from repro.core.ladder import (  # noqa: F401
+    BackendDemotionWarning, apply_resilient, resilient_fastmult)
 from repro.core.plan_api import (  # noqa: F401
     KERNEL_MODES, PlanParams, PlanSpec, apply, build, describe, fastmult,
     load_plan, plan_from_spec, reweight, save_plan, specialize, update_plan)
+from repro.core.plan_guard import PlanValidationError, validate  # noqa: F401

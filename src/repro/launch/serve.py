@@ -50,6 +50,7 @@ def main():
     total_tokens = args.requests * args.max_new
     print(f"served {args.requests} requests / {total_tokens} tokens in "
           f"{ticks} ticks, {dt:.2f}s ({total_tokens/dt:.1f} tok/s)")
+    print(eng.health_banner())
 
 
 if __name__ == "__main__":

@@ -450,10 +450,15 @@ def resolve_topo_backend(cfg, backend: str | None = None) -> str:
     shared by the ViT grid path and plan-serving. Resolution follows the
     topo impl axis: explicit `backend` arg > cfg.topo_backend >
     cfg.topo_attn_impl ("pallas" -> the fused fdist_matvec executor
-    backend, anything else -> "plan")."""
-    return (backend or getattr(cfg, "topo_backend", None)
-            or ("pallas" if getattr(cfg, "topo_attn_impl", "fft") == "pallas"
-                else "plan"))
+    backend, anything else -> "plan") — then filtered through the
+    degradation ladder, so a rung that already failed a health probe
+    (`ladder.block_backend`) is never selected again this process."""
+    from repro.core import ladder
+
+    req = (backend or getattr(cfg, "topo_backend", None)
+           or ("pallas" if getattr(cfg, "topo_attn_impl", "fft") == "pallas"
+               else "plan"))
+    return ladder.effective_backend(req) if req in ladder.LADDER else req
 
 
 def topo_attention_train(cfg, p, p_topo, x, positions, causal=True):

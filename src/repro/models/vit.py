@@ -59,6 +59,24 @@ def build_grid_integrator(cfg, backend: str | None = None) -> Integrator:
     if integ is None:
         mst = minimum_spanning_tree(grid_graph(side, side))
         integ = Integrator(mst, backend=backend, leaf_size=16)
+        # degradation ladder: health-probe compiled rungs once per (side,
+        # backend) BEFORE live traffic sees them — a kernel that fails to
+        # launch (or emits non-finite fields) blocks that rung globally and
+        # this grid quietly serves from the next one down
+        if backend in ("pallas",):
+            from repro.core import ladder
+
+            reason = ladder.probe_backend(integ.spec, integ.params, backend)
+            if reason is not None:
+                ladder.block_backend(backend, f"grid {side}x{side} probe: "
+                                     f"{reason}")
+                backend = ladder.effective_backend(backend)
+                key = (side, backend)
+                integ = _GRID_INTEGRATOR_CACHE.get(key)
+                if integ is None:
+                    integ = Integrator(mst, backend=backend, leaf_size=16)
+                    _GRID_INTEGRATOR_CACHE.put(key, integ)
+                return integ
         _GRID_INTEGRATOR_CACHE.put(key, integ)
     return integ
 

@@ -6,7 +6,16 @@ the whole batch; finished sequences (EOS or max_len) free their slot. The KV
 cache is allocated once at engine construction (paged at slot granularity).
 Prefill uses the cacheless prefill path then replays tokens through decode to
 warm the slot's cache — simple and correct; a fused prefill-into-cache step
-is the production optimization documented in DESIGN §6.
+is the natural production optimization on top of this layout.
+
+Fault isolation (README "Failure modes and the degradation ladder"): a
+failing slot is evicted and its request re-queued with bounded retry +
+exponential backoff instead of killing the whole batch; a decode-step crash
+evicts the wave but leaves the engine serviceable; per-request deadlines
+bound queue + decode time; `stats()` is the engine health snapshot
+(retries, evictions, demotions, cache/validation counters) surfaced in the
+serve banner. Greedy decode is deterministic, so a retried request replays
+from scratch and lands on the exact tokens it would have produced.
 """
 from __future__ import annotations
 
@@ -17,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api
+from repro.testing import faults
 
 
 @dataclasses.dataclass
@@ -26,23 +36,35 @@ class Request:
     max_new_tokens: int = 16
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # robustness knobs/outcome (per-request overrides of engine defaults)
+    max_retries: int | None = None   # None -> engine default
+    deadline_ticks: int | None = None  # ticks from submit() until expiry
+    retries: int = 0
+    error: str | None = None         # set iff done without a full answer
 
 
 class ServeEngine:
     def __init__(self, cfg, params, batch_slots: int = 4, max_len: int = 256,
-                 eos_id: int | None = None, plan=None):
+                 eos_id: int | None = None, plan=None,
+                 max_retries: int = 2, retry_backoff: int = 1):
         """`plan` optionally preloads a functional integration plan — an
         `ftfi.save_plan` artifact path or a (PlanSpec, PlanParams) pair —
         so topological-mask serving never rebuilds the IT at startup:
         square (patch-grid) plans are installed as the ViT grid integrator,
         and the provenance (content hash, seed, leaf_size) is surfaced in
-        `plan_banner()` for the serve log.
+        `plan_banner()` for the serve log. Either form is validated by the
+        plan guard before anything dereferences its index arrays.
 
         Plans compiled on demand (e.g. per-request topological masks going
         through `compile_plan`) additionally consult the disk-persistent
         plan cache when `FTFI_PLAN_CACHE` is configured, so even cold
         engine processes serving recurring topologies skip the IT rebuild;
-        `plan_banner()` reports the cache status."""
+        `plan_banner()` reports the cache status.
+
+        `max_retries` bounds how many times a faulted request is re-queued
+        before it is failed (`Request.error` set); `retry_backoff` scales
+        the exponential re-admission delay (backoff * 2**(retries-1) ticks).
+        """
         self.cfg = cfg
         self.params = params
         self.plan_spec = self.plan_params = None
@@ -51,7 +73,12 @@ class ServeEngine:
             if isinstance(plan, (str, bytes)) or hasattr(plan, "__fspath__"):
                 from repro import ftfi
 
-                plan = ftfi.load_plan(plan)
+                plan = ftfi.load_plan(plan)  # validated inside load_plan
+            else:
+                from repro.core import plan_guard
+
+                plan_guard.validate(plan[0], plan[1],
+                                    where="ServeEngine(plan=...)")
             self.plan_spec, self.plan_params = plan
             side = int(round(np.sqrt(self.plan_spec.n)))
             # install only when the plan actually covers THIS model's patch
@@ -69,6 +96,8 @@ class ServeEngine:
         self.B = batch_slots
         self.S = max_len
         self.eos = eos_id
+        self.max_retries = int(max_retries)
+        self.retry_backoff = max(0, int(retry_backoff))
         self.cache = api.init_cache(cfg, self.B, self.S)
         self.slot_req: list[Request | None] = [None] * self.B
         self.slot_pos = np.zeros(self.B, dtype=np.int64)
@@ -76,6 +105,12 @@ class ServeEngine:
             lambda params, cache, tok, pos: api.decode_fn(
                 cfg, params, cache, tok, pos, self.S))
         self.queue: list[Request] = []
+        self._tick = 0
+        self._stats = {
+            "ticks": 0, "completed": 0, "failed": 0, "retries": 0,
+            "evictions": 0, "step_failures": 0, "slot_faults": 0,
+            "deadline_expired": 0,
+        }
 
     def plan_banner(self) -> str:
         """Provenance lines for the serve log: which integration plan this
@@ -106,46 +141,163 @@ class ServeEngine:
                 f"grid_h={s.grid_h} reweightable={s.reweightable} "
                 f"({status})\n{cache_line}")
 
+    def stats(self) -> dict:
+        """Engine health snapshot: serving counters plus the robustness
+        counters of the layers underneath (degradation ladder, plan guard,
+        disk plan cache)."""
+        from repro.core import ladder, plan_cache, plan_guard
+
+        lst = ladder.stats()
+        return {
+            **self._stats,
+            "ladder": lst,
+            "plan_guard": plan_guard.stats(),
+            "plan_cache": plan_cache.stats() if plan_cache.enabled() else None,
+        }
+
+    def health_banner(self) -> str:
+        """One-line health summary for the serve log."""
+        st = self.stats()
+        lad = st["ladder"]
+        blocked = ",".join(sorted(lad["blocked"])) or "none"
+        return (f"health: ticks={st['ticks']} done={st['completed']} "
+                f"failed={st['failed']} retries={st['retries']} "
+                f"evictions={st['evictions']} "
+                f"demotions={lad['demotions']} blocked={blocked} "
+                f"validations={st['plan_guard']['validations']} "
+                f"(rejected {st['plan_guard']['failures']})")
+
     def submit(self, req: Request):
+        req._submit_tick = self._tick
+        req._not_before = self._tick
         self.queue.append(req)
 
+    # -- failure handling ---------------------------------------------------
+
+    def _fail(self, req: Request, reason: str) -> None:
+        req.done = True
+        req.error = reason
+        self._stats["failed"] += 1
+
+    def _deadline_left(self, req: Request) -> int | None:
+        if req.deadline_ticks is None:
+            return None
+        return req._submit_tick + req.deadline_ticks - self._tick
+
+    def _evict(self, slot: int, reason: str) -> None:
+        """Per-request isolation: free the slot and either re-queue the
+        request (bounded retry, exponential backoff, output replayed from
+        scratch — greedy decode is deterministic) or fail it."""
+        req = self.slot_req[slot]
+        self.slot_req[slot] = None
+        self.slot_pos[slot] = 0
+        if req is None:
+            return
+        self._stats["evictions"] += 1
+        req.retries += 1
+        req.out = []
+        req._pending_prompt = None
+        limit = self.max_retries if req.max_retries is None else req.max_retries
+        if req.retries > limit:
+            self._fail(req, f"failed after {limit} retries: {reason}")
+        else:
+            self._stats["retries"] += 1
+            req._not_before = (self._tick
+                               + self.retry_backoff * 2 ** (req.retries - 1))
+            self.queue.append(req)
+
     def _admit(self):
-        for slot in range(self.B):
-            if self.slot_req[slot] is None and self.queue:
-                req = self.queue.pop(0)
+        """Admit a fresh wave. Admission happens ONLY when no slot is active:
+        every request in a wave starts at pos 0, which is what makes the
+        lockstep `pos = max(slot_pos[active])` decode correct — a request
+        admitted into a freed slot mid-wave would write its tokens at the
+        PREVIOUS wave's positions and attend to another request's KV cache.
+        Queued requests still in retry backoff or past their deadline are
+        skipped/failed here."""
+        if any(r is not None for r in self.slot_req):
+            return
+        still_queued: list[Request] = []
+        free = list(range(self.B))
+        for req in self.queue:
+            left = self._deadline_left(req)
+            if left is not None and left <= 0:
+                self._stats["deadline_expired"] += 1
+                self._fail(req, f"deadline expired after "
+                                f"{req.deadline_ticks} ticks in queue")
+                continue
+            if free and req._not_before <= self._tick:
+                slot = free.pop(0)
                 self.slot_req[slot] = req
                 self.slot_pos[slot] = 0
                 req._pending_prompt = list(req.prompt)
+            else:
+                still_queued.append(req)
+        self.queue = still_queued
 
     def step(self):
-        """One engine tick: feed each active slot its next token."""
+        """One engine tick: feed each active slot its next token. Faults are
+        contained: a decode-step crash evicts (and re-queues) the wave, a
+        non-finite logits row evicts only that slot."""
+        self._tick += 1
+        self._stats["ticks"] += 1
         self._admit()
+        active = [s for s in range(self.B) if self.slot_req[s] is not None]
+        if not active:
+            return False
+        # enforce per-request deadlines on the active wave too (covers a
+        # wave stalled by repeated step failures)
+        for s in active:
+            req = self.slot_req[s]
+            left = self._deadline_left(req)
+            if left is not None and left <= 0:
+                self._stats["deadline_expired"] += 1
+                self.slot_req[s] = None
+                self.slot_pos[s] = 0
+                self._stats["evictions"] += 1
+                self._fail(req, f"deadline expired after "
+                                f"{req.deadline_ticks} ticks")
         active = [s for s in range(self.B) if self.slot_req[s] is not None]
         if not active:
             return False
         # all slots share one global step; each slot feeds prompt tokens until
         # exhausted, then its own generations. Positions are per-slot; the
         # jitted step uses the max pos (slots at earlier pos simply have
-        # stale-but-masked cache above their own pos).
+        # stale-but-masked cache above their own pos). Lockstep holds because
+        # _admit only starts fresh waves (all at pos 0).
         toks = np.zeros((self.B, 1), dtype=np.int32)
-        for s in range(self.B):
-            req = self.slot_req[s]
-            if req is None:
-                continue
-            if req._pending_prompt:
-                toks[s, 0] = req._pending_prompt[0]
-            else:
-                toks[s, 0] = req.out[-1]
-        pos = int(self.slot_pos[active].max())
-        # NOTE: per-slot positions require per-slot pos support; for the
-        # simplified engine all admitted slots advance in lockstep, which we
-        # guarantee by admitting only at pos 0 (fresh batch waves).
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks),
-            jnp.asarray(pos, jnp.int32))
-        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
         for s in active:
             req = self.slot_req[s]
+            if req._pending_prompt:
+                toks[s, 0] = req._pending_prompt[0]
+            elif req.out:
+                toks[s, 0] = req.out[-1]
+        pos = int(self.slot_pos[active].max())
+        try:
+            faults.fire("serve.step", tick=self._tick)
+            logits, cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(pos, jnp.int32))
+            logits_np = np.asarray(jax.device_get(logits[:, -1, :]),
+                                   dtype=np.float32)
+        except Exception as e:
+            # whole-step failure: the engine survives, the wave is re-queued
+            self._stats["step_failures"] += 1
+            reason = f"decode step failed: {type(e).__name__}: {e}"
+            for s in active:
+                self._evict(s, reason)
+            return True
+        self.cache = cache
+        logits_np = faults.transform("serve.logits", logits_np,
+                                     tick=self._tick)
+        finite = np.isfinite(logits_np).all(axis=-1)
+        nxt = np.argmax(logits_np, axis=-1)
+        for s in active:
+            req = self.slot_req[s]
+            if not finite[s]:
+                # per-slot corruption: only this request is touched
+                self._stats["slot_faults"] += 1
+                self._evict(s, "non-finite logits")
+                continue
             if req._pending_prompt:
                 req._pending_prompt.pop(0)
                 if not req._pending_prompt:
@@ -157,13 +309,14 @@ class ServeEngine:
             if (len(req.out) >= req.max_new_tokens or hit_eos
                     or self.slot_pos[s] >= self.S - 1):
                 req.done = True
+                self._stats["completed"] += 1
                 self.slot_req[s] = None
         return True
 
     def run(self, max_ticks: int = 10000):
-        done = []
         ticks = 0
-        while (self.queue or any(self.slot_req)) and ticks < max_ticks:
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and ticks < max_ticks:
             self.step()
             ticks += 1
         return ticks

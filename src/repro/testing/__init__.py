@@ -1,0 +1,2 @@
+"""Testing utilities shipped with the library (fault injection points are
+referenced from production code, so they live in-tree, not under tests/)."""
