@@ -234,6 +234,91 @@ def _forest_row(rng, fn, num_trees=90, repeat=2):
     }
 
 
+def run_sharding(sizes=(4000,), devices=(1, 2, 4, 8), repeat=3,
+                 leaf_size=256):
+    """Weak-scaling rows for the shard_map plan executor: one jitted
+    integrate per device count on a 1-D data submesh over the first D
+    visible devices, parity-checked against the single-device jitted plan
+    executor. Rows carry a `devices` column plus the partition's
+    halo/per-device-work stats (`check_bench --suite sharding` gates
+    rel_err and the per-device work reduction). Device counts beyond
+    `jax.device_count()` are skipped WITH a printed note — never silently
+    (force 8 host devices via
+    XLA_FLAGS=--xla_force_host_platform_device_count=8)."""
+    import jax
+    from jax.sharding import Mesh
+
+    _jax_warmup()
+    rng = np.random.default_rng(0)
+    fn = Exponential(-0.5)
+    avail = jax.device_count()
+    rows = []
+    for n in sizes:
+        tree = minimum_spanning_tree(synthetic_graph(n, n // 2, seed=1))
+        spec, pp = ftfi.build(tree, leaf_size=leaf_size)
+        engine = ftfi.describe(spec, fn)["cross_engine"]
+        X = rng.normal(size=(spec.n, 4)).astype(np.float32)
+        fm1 = jax.jit(ftfi.fastmult(spec, fn))
+        ref = np.asarray(fm1(pp, X))
+        refmax = max(float(np.max(np.abs(ref))), 1e-9)
+        t1 = None
+        for D in devices:
+            if D > avail:
+                print(f"# sharding: devices={D} skipped — only {avail} "
+                      "visible (set XLA_FLAGS="
+                      "--xla_force_host_platform_device_count=8)")
+                continue
+            if D == 1:
+                run_once = lambda: np.asarray(fm1(pp, X))
+                stats = {"block": spec.n, "halo_width": 0, "halo_total": 0,
+                         "src_rows": int(spec.src_gather.size),
+                         "tgt_rows": int(spec.tgt_gather.size)}
+            else:
+                mesh = Mesh(np.asarray(jax.devices()[:D]).reshape(D),
+                            ("data",))
+                fms = jax.jit(ftfi.sharded_fastmult(spec, fn, mesh=mesh))
+                run_once = lambda: np.asarray(fms(pp, X))
+                stats = ftfi.shard_stats(spec, D)
+            t_int = timeit(run_once, repeat=repeat, warmup=1)
+            err = float(np.max(np.abs(run_once() - ref)) / refmax)
+            if D == 1:
+                t1 = t_int
+            scaling = (t1 / t_int) if t1 else 1.0
+            emit(f"sharding/synthetic/n{n}/d{D}_int", t_int,
+                 f"scaling={scaling:.2f}x relerr={err:.1e} "
+                 f"block={stats['block']} halo={stats['halo_total']}")
+            rows.append({
+                "case": "synthetic", "n": n, "backend": "sharded",
+                "engine": engine, "devices": D, "int_s": t_int,
+                "rel_err": err, "scaling": scaling,
+                "block": int(stats["block"]),
+                "halo_width": int(stats["halo_width"]),
+                "halo_total": int(stats["halo_total"]),
+                "device_rows": int(stats["src_rows"] + stats["tgt_rows"]),
+                "global_rows": int(spec.src_gather.size
+                                   + spec.tgt_gather.size),
+            })
+    return rows
+
+
+def _merge_sharding_rows(path: str, rows: list) -> None:
+    """Replace the sharded rows of an existing BENCH_ftfi_runtime.json (or
+    start a fresh artifact) so `--devices` runs compose with the fig3 suite
+    instead of clobbering it."""
+    import json
+
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError):
+        doc = {"suite": "fig3", "rows": []}
+    doc["rows"] = [r for r in doc.get("rows", [])
+                   if r.get("backend") != "sharded"] + rows
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1)
+    print(f"# wrote {len(rows)} sharded rows to {path}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default="host,plan,pallas,ftfi",
@@ -242,7 +327,30 @@ def main():
     ap.add_argument("--sizes", default="1000,4000")
     ap.add_argument("--mesh-subdiv", default="3")
     ap.add_argument("--repeat", type=int, default=2)
+    ap.add_argument("--devices", default=None,
+                    help="comma list of device counts (e.g. 1,2,4,8): run "
+                         "ONLY the weak-scaling shard_map rows and merge "
+                         "them into --json")
+    ap.add_argument("--json", default="BENCH_ftfi_runtime.json",
+                    help="artifact the --devices rows merge into")
     args = ap.parse_args()
+    if args.devices:
+        devices = tuple(int(s) for s in args.devices.split(",") if s)
+        # force enough fake host devices BEFORE the jax backend initializes
+        # (safe: nothing above touched a device; plain import does not)
+        import os
+
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{max(devices)}").strip()
+        print("name,us_per_call,derived")
+        rows = run_sharding(
+            sizes=tuple(int(s) for s in args.sizes.split(",") if s),
+            devices=devices, repeat=args.repeat)
+        _merge_sharding_rows(args.json, rows)
+        return
     print("name,us_per_call,derived")
     run(sizes=tuple(int(s) for s in args.sizes.split(",") if s),
         mesh_subdiv=tuple(int(s) for s in args.mesh_subdiv.split(",") if s),

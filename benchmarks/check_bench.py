@@ -38,9 +38,17 @@ to --robustness-json (default BENCH_robustness.json). Fails when:
     post-write disk-cache corruption, serve slot/step crash — fails to
     recover or degrade to the host-exact output.
 
+--suite sharding gates the weak-scaling rows bench_ftfi_runtime --devices
+wrote into BENCH_ftfi_runtime.json: every sharded row's parity rel_err vs
+the single-device jitted executor must stay under --sharding-rel-err
+(default 1e-5), and every multi-device partition must reduce per-device
+work (padded per-device gather length under --max-work-frac of the global
+plan's flat entries).
+
   PYTHONPATH=src python -m benchmarks.check_bench BENCH_ftfi_runtime.json
   PYTHONPATH=src python -m benchmarks.check_bench --suite topo BENCH_topo_attention.json
   PYTHONPATH=src python -m benchmarks.check_bench --suite robustness
+  PYTHONPATH=src python -m benchmarks.check_bench --suite sharding BENCH_ftfi_runtime.json
 """
 from __future__ import annotations
 
@@ -205,6 +213,45 @@ def check_disk_cache(warm_ceiling: float) -> list[str]:
             plan_cache.reset_to_env()
             clear_flat_cache()
             clear_plan_cache()
+    return errors
+
+
+def check_sharding_json(path: str, max_rel_err: float,
+                        max_work_frac: float) -> list[str]:
+    """Weak-scaling gate over the sharded rows of BENCH_ftfi_runtime.json
+    (`bench_ftfi_runtime --devices 1,2,4,8`): every row's parity rel_err
+    against the single-device jitted executor must stay under
+    --sharding-rel-err, and every multi-device partition must actually
+    reduce per-device work — the padded per-device gather length under
+    --max-work-frac of the global plan's flat entries."""
+    with open(path) as fh:
+        rows = json.load(fh)["rows"]
+    rows = [r for r in rows if r.get("backend") == "sharded"]
+    errors = []
+    if not rows:
+        errors.append(f"{path}: no sharded rows — run "
+                      "bench_ftfi_runtime --devices 1,2,4,8 first")
+    if not any(r["devices"] > 1 for r in rows):
+        errors.append(f"{path}: sharded rows cover only 1 device — the "
+                      "weak-scaling sweep did not run (too few visible "
+                      "devices?)")
+    for r in rows:
+        where = f"{r['case']}/n{r['n']}/devices{r['devices']}"
+        if r["rel_err"] > max_rel_err:
+            errors.append(f"{where}: sharded parity rel_err "
+                          f"{r['rel_err']:.2e} > {max_rel_err:.0e}")
+        if r["devices"] > 1:
+            frac = r["device_rows"] / max(r["global_rows"], 1)
+            if frac > max_work_frac:
+                errors.append(
+                    f"{where}: per-device work {r['device_rows']} rows is "
+                    f"{frac:.0%} of the global plan ({r['global_rows']}) > "
+                    f"{max_work_frac:.0%} — the partition is not reducing "
+                    "work")
+            n_pad = r["block"] * r["devices"]
+            if n_pad < r["n"]:
+                errors.append(f"{where}: block {r['block']} x {r['devices']}"
+                              f" devices < n={r['n']} (vertices dropped)")
     return errors
 
 
@@ -438,7 +485,8 @@ def check_robustness(out_path: str, guard_overhead: float,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("json", nargs="?", default="BENCH_ftfi_runtime.json")
-    ap.add_argument("--suite", choices=("ftfi", "topo", "robustness"),
+    ap.add_argument("--suite",
+                    choices=("ftfi", "topo", "robustness", "sharding"),
                     default="ftfi")
     ap.add_argument("--max-rel-err", type=float, default=1e-4)
     ap.add_argument("--it-n", type=int, default=2000)
@@ -464,11 +512,20 @@ def main() -> None:
     ap.add_argument("--robustness-json", default="BENCH_robustness.json",
                     help="fault-matrix artifact written by "
                     "--suite robustness")
+    ap.add_argument("--sharding-rel-err", type=float, default=1e-5,
+                    help="max parity rel_err of a sharded row vs the "
+                    "single-device jitted executor")
+    ap.add_argument("--max-work-frac", type=float, default=0.75,
+                    help="max per-device flat work as a fraction of the "
+                    "global plan on multi-device sharded rows")
     args = ap.parse_args()
 
     if args.suite == "robustness":
         errors = check_robustness(args.robustness_json, args.guard_overhead,
                                   args.ladder_rel_err)
+    elif args.suite == "sharding":
+        errors = check_sharding_json(args.json, args.sharding_rel_err,
+                                     args.max_work_frac)
     elif args.suite == "topo":
         errors = check_topo_json(args.json, args.topo_rel_err)
     else:

@@ -37,6 +37,10 @@ class ModelConfig:
     # tree/grid Integrator backend override for the ViT path (None: follow
     # topo_attn_impl — pallas -> pallas, else plan)
     topo_backend: Optional[str] = None
+    # multi-device: run the topo plan executor under shard_map on the active
+    # launch.sharding mesh (leaf blocks over the plan axis); no-op without a
+    # mesh or on one device
+    topo_shard_plan: bool = False
 
     # mlp
     mlp_act: str = "silu"  # silu (SwiGLU) | gelu (GeGLU)

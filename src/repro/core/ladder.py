@@ -31,6 +31,7 @@ returned with a warning (garbage input, not a backend fault).
 """
 from __future__ import annotations
 
+import os
 import warnings
 from typing import Callable
 
@@ -41,6 +42,12 @@ import jax.numpy as jnp
 from repro.testing import faults
 
 LADDER = ("pallas", "plan", "host")
+
+# backend="auto" size threshold: below this vertex count the fused pallas
+# kernel LOSES to the plan executor (BENCH_ftfi_runtime.json: speedup_int
+# 0.88 at n=1000) — kernel launch + padding overheads dominate until the
+# cross buckets are wide enough to feed it
+AUTO_PALLAS_MIN_N = int(os.environ.get("FTFI_AUTO_PALLAS_MIN_N", "4000"))
 
 _stats = {"demotions": 0, "errors": 0, "nonfinite": 0}
 _blocked: dict[str, str] = {}
@@ -88,9 +95,17 @@ def unblock_backends() -> None:
     _blocked.clear()
 
 
-def effective_backend(backend: str) -> str:
+def effective_backend(backend: str, n: int | None = None) -> str:
     """First non-blocked rung at or below `backend` — what dispatch sites
-    (topo attention, ViT grids, serving) should actually build with."""
+    (topo attention, ViT grids, serving) should actually build with.
+
+    `backend="auto"` resolves by problem size first: pallas at or above
+    `AUTO_PALLAS_MIN_N` vertices, else plan (pass `n`; without it auto is
+    conservative and picks plan). The resolved rung still rides the blocked
+    chain like any explicit choice."""
+    if backend == "auto":
+        backend = ("pallas" if n is not None and n >= AUTO_PALLAS_MIN_N
+                   else "plan")
     for level in chain_from(backend):
         if level not in _blocked:
             return level

@@ -204,7 +204,8 @@ def _resolve_plan_handle(integrator):
 
 
 def make_tree_fastmult(integrator, g: str, coeffs,
-                       dist_scale: float = 1.0) -> Callable:
+                       dist_scale: float = 1.0, *, sharded: bool = False,
+                       mesh=None) -> Callable:
     """FastMult_M for M = [f(dist_T(i,j))] via the functional plan API.
 
     Works on fields with arbitrary leading batch/head axes: the mask multiply
@@ -213,16 +214,31 @@ def make_tree_fastmult(integrator, g: str, coeffs,
     backend with a jit-able fastmult, i.e. plan or pallas) OR a functional
     `(spec, params)` pair from `ftfi.build` / `ftfi.load_plan`.
 
+    `sharded=True` rides the multi-device shard_map executor
+    (`plan_shard.sharded_fastmult`) over `mesh` (default: the active
+    `launch.sharding` mesh): leaf blocks over the plan axis, halo exchange +
+    psum_scatter, exact to the single-device path. With no mesh (or one
+    device) it falls back to the single-device executor, so model code can
+    pass `sharded=cfg.topo_shard_plan` unconditionally.
+
     For concrete (non-traced) coefficients the closure is memoized per
-    (integrator-or-spec, g, coeffs, dist_scale), so repeated mask rebuilds
-    (serving, eval loops) reuse one compiled executor; traced coeffs
-    (training under jit) bypass the cache and trace inline as before."""
+    (integrator-or-spec, g, coeffs, dist_scale[, mesh]), so repeated mask
+    rebuilds (serving, eval loops) reuse one compiled executor; traced
+    coeffs (training under jit) bypass the cache and trace inline as
+    before."""
     impl, p_spec, p_params = _resolve_plan_handle(integrator)
+    if sharded and mesh is None:
+        from repro.launch import sharding
+
+        mesh = sharding.current_mesh()
+    use_shard = (bool(sharded) and mesh is not None
+                 and int(mesh.devices.size) > 1
+                 and p_spec is not None and p_params is not None)
     ref_target = integrator if impl is not None else p_spec
     key = None
     traced = any(isinstance(leaf, jax.core.Tracer)
                  for leaf in jax.tree_util.tree_leaves(coeffs))
-    if impl is None:
+    if impl is None or use_shard:
         # reweighted params may themselves be traced (training edge weights
         # under an enclosing jit): never cache a tracer-capturing closure
         traced = traced or any(
@@ -235,13 +251,27 @@ def make_tree_fastmult(integrator, g: str, coeffs,
         # many PlanParams (ftfi.reweight), and each deserves its own bound
         # closure — the entry pins `p_params` so its id stays valid for the
         # entry's lifetime
-        key = (id(ref_target), None if impl is not None else id(p_params),
-               g, float(dist_scale), c.shape, c.tobytes())
+        key = (id(ref_target),
+               id(p_params) if (impl is None or use_shard) else None,
+               g, float(dist_scale), c.shape, c.tobytes(),
+               id(mesh) if use_shard else 0)
         hit = _TREE_FM_CACHE.get(key)
         if hit is not None and hit[1]() is ref_target:
             return hit[0]
     f_eval = mask_f(g, coeffs, dist_scale)
-    if impl is not None:
+    if use_shard:
+        # multi-device path: shard_map executor over the mesh; the closure
+        # pins `mesh`, so the id() in the memo key stays valid for the
+        # entry's lifetime
+        from repro.core import plan_shard
+
+        sfm = plan_shard.sharded_fastmult(p_spec, f_eval, mesh=mesh)
+        if traced:
+            base = lambda X: sfm(p_params, X)  # noqa: E731
+        else:
+            jfm = jax.jit(sfm)
+            base = lambda X: jfm(p_params, X)  # noqa: E731
+    elif impl is not None:
         # backend path: the impl's fastmult memoizes/jits over ITS OWN
         # (spec, params) through the same pure executor as plan_api.apply
         base = impl.fastmult(f_eval)

@@ -55,7 +55,7 @@ KERNEL_MODES = ("poly", "exp", "expq", "rational")
 _SAVE_VERSION = 1
 # PlanSpec field-layout generation, mixed into disk-cache keys (NOT the npz
 # version: old artifacts still load — absent fields default to None)
-_SPEC_SCHEMA = 2
+_SPEC_SCHEMA = 3
 
 
 # ----------------------------------------------------------------------------
@@ -120,6 +120,12 @@ class PlanSpec:
     edges_v: np.ndarray | None = None
     edge_w0: np.ndarray | None = None  # (E,) build-time edge weights
     ghosts: np.ndarray | None = None  # deleted-vertex ids (update_plan)
+    # mesh/device provenance (0/empty = artifact not bound to a mesh):
+    # recorded by `save_plan(..., mesh=...)` so plan_guard / apply_sharded
+    # can reject a sharded artifact on a mismatched mesh up front
+    mesh_devices: int = 0
+    mesh_axes: tuple = ()
+    shard_layout: int = 0
 
     def __post_init__(self):
         # digest is lazy: hashing tens of MB of index arrays costs more than
@@ -141,7 +147,10 @@ class PlanSpec:
         return {"fingerprint": self.fingerprint, "seed": self.seed,
                 "leaf_size": self.leaf_size, "n": self.n,
                 "num_trees": self.num_trees, "grid_h": self.grid_h,
-                "reweightable": self.reweightable}
+                "reweightable": self.reweightable,
+                "mesh_devices": self.mesh_devices,
+                "mesh_axes": tuple(self.mesh_axes),
+                "shard_layout": self.shard_layout}
 
     def __hash__(self):
         return hash(self.digest)
@@ -469,7 +478,16 @@ def select_cross(spec: PlanSpec, fspec: FamilySpec, backend: str = "plan",
     cross_multiply(i, tgt_d, tgt_mask, src_d, src_mask, Xp) -> (B, Ut, d)
     receives the bucket index plus the *params* distance arrays (traceable),
     so every engine except the grid/Hankel one differentiates through —
-    and flows gradients into — reweighted distances."""
+    and flows gradients into — reweighted distances.
+
+    `backend="auto"` resolves by problem size through the degradation
+    ladder: the fused pallas kernel only wins past
+    `ladder.AUTO_PALLAS_MIN_N` vertices (BENCH_ftfi_runtime.json shows it
+    *slower* than the plan engine at n=1000), so small plans pick "plan"."""
+    if backend == "auto":
+        from repro.core import ladder
+
+        backend = ladder.effective_backend("auto", n=spec.n)
     if backend == "pallas" and fspec.mode in KERNEL_MODES:
         opts = dict(pallas_opts or {})
         coeffs = jnp.asarray(np.asarray(fspec.coeffs, np.float32))
@@ -582,14 +600,25 @@ def _fspec(fn) -> FamilySpec:
 
 def apply(spec: PlanSpec, params: PlanParams, fn, X, *,
           backend: str = "plan", degree: int = 32,
-          pallas_opts: dict | None = None):
+          pallas_opts: dict | None = None, mesh=None,
+          axis: str | None = None):
     """Pure integration: Y = M_f X with distances/weights from `params`.
 
     jit/vmap/grad-safe: `spec` is static (pytree aux), `params`/`X` are
     traced. `fn` is a CordialFn, FamilySpec, or traceable callable.
     `backend` picks the cross-engine family: "plan" (exact LDR + Hankel on
-    grids + Chebyshev) or "pallas" (fused fdist_matvec kernel for the
-    in-kernel families). The host backend remains facade-only (numpy)."""
+    grids + Chebyshev), "pallas" (fused fdist_matvec kernel for the
+    in-kernel families), or "auto" (size-resolved through the ladder). The
+    host backend remains facade-only (numpy).
+
+    `mesh` (optionally with `axis`) routes through the multi-device
+    shard_map executor — see `plan_shard.apply_sharded`."""
+    if mesh is not None:
+        from repro.core.plan_shard import apply_sharded
+
+        return apply_sharded(spec, params, fn, X, mesh=mesh, axis=axis,
+                             backend=backend, degree=degree,
+                             pallas_opts=pallas_opts)
     fspec = _fspec(fn)
     _, cross = select_cross(spec, fspec, backend=backend, degree=degree,
                             pallas_opts=pallas_opts)
@@ -694,16 +723,33 @@ _SPEC_TUPLE_FIELDS = ("cross_tgt_mask", "cross_src_mask", "cross_tgt_d0",
 _SPEC_SCALAR_FIELDS = ("n", "num_trees", "tree_sizes", "leaf_size", "seed",
                        "fingerprint", "grid_h", "reweightable",
                        "cross_src_off", "cross_tgt_off", "n_src_groups",
-                       "n_tgt_groups", "num_cross_jobs", "num_edges")
+                       "n_tgt_groups", "num_cross_jobs", "num_edges",
+                       "mesh_devices", "mesh_axes", "shard_layout")
+# absent in pre-schema-3 artifacts; the loader falls back to these
+_SPEC_SCALAR_DEFAULTS = {"mesh_devices": 0, "mesh_axes": (),
+                         "shard_layout": 0}
 
 
-def save_plan(path, spec: PlanSpec, params: PlanParams) -> None:
+def save_plan(path, spec: PlanSpec, params: PlanParams, *,
+              mesh=None) -> None:
     """Serialize (spec, params) to one .npz artifact (no pickle).
 
     The artifact is self-contained: `load_plan` reconstructs both halves
     with zero IT rebuild, and a load -> apply reproduces results bit-for-bit
     (params are saved post-conversion, so the loaded arrays are the same
-    bits the builder's executor consumed)."""
+    bits the builder's executor consumed).
+
+    `mesh` stamps mesh/device provenance (device count, axis names, shard
+    layout version) into the artifact: loading it onto a mismatched mesh
+    then fails fast in `plan_guard` / `apply_sharded` instead of crashing
+    at gather time."""
+    if mesh is not None:
+        from repro.core.plan_shard import SHARD_LAYOUT_VERSION
+
+        spec = dataclasses.replace(
+            spec, mesh_devices=int(mesh.devices.size),
+            mesh_axes=tuple(str(a) for a in mesh.axis_names),
+            shard_layout=SHARD_LAYOUT_VERSION)
     arrays: dict = {}
     meta: dict = {"version": _SAVE_VERSION}
     for name in _SPEC_SCALAR_FIELDS:
@@ -754,7 +800,7 @@ def load_plan(path, validate: bool = True):
                     f"{meta.get('version')!r}")
             kwargs: dict = {}
             for name in _SPEC_SCALAR_FIELDS:
-                val = meta[name]
+                val = meta.get(name, _SPEC_SCALAR_DEFAULTS.get(name))
                 if isinstance(val, list):
                     val = tuple(val)
                 kwargs[name] = val

@@ -127,6 +127,33 @@ def check_spec(spec, params=None, max_issues: int = 16) -> list[str]:
                       f"{len(spec.tree_sizes)} tree_sizes")
     if sum(int(t) for t in spec.tree_sizes) != n:
         issues.append(f"tree_sizes sum {sum(spec.tree_sizes)} != n={n}")
+    # -- mesh / shard-layout provenance -------------------------------------
+    # A plan saved with `save_plan(..., mesh=...)` records the mesh it was
+    # laid out for; executing it on a process that cannot form that mesh
+    # (fewer devices, newer incompatible shard layout) must fail at load,
+    # not deep inside shard_map with an opaque collective error.
+    shard_layout = int(getattr(spec, "shard_layout", 0) or 0)
+    mesh_devices = int(getattr(spec, "mesh_devices", 0) or 0)
+    if shard_layout:
+        from repro.core.plan_shard import SHARD_LAYOUT_VERSION
+
+        if shard_layout > SHARD_LAYOUT_VERSION:
+            issues.append(
+                f"shard_layout={shard_layout}: artifact uses a newer shard "
+                f"layout than this build supports "
+                f"(SHARD_LAYOUT_VERSION={SHARD_LAYOUT_VERSION})")
+        if mesh_devices:
+            import jax
+
+            avail = jax.device_count()
+            if mesh_devices > avail:
+                issues.append(
+                    f"mesh_devices={mesh_devices}: sharded artifact needs "
+                    f"{mesh_devices} devices but only {avail} are visible "
+                    f"(axes {tuple(getattr(spec, 'mesh_axes', ()) or ())})")
+    if done():
+        return issues
+
     nb = len(spec.cross_tgt_mask)
     nl = len(spec.leaf_ids)
     for name, want in (("cross_src_mask", nb), ("cross_tgt_d0", nb),

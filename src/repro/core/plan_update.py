@@ -502,21 +502,46 @@ class _State:
         # params: re-upload only touched buckets — in ONE batched
         # device_put (per-array dispatch overhead dominates the byte cost
         # at these sizes) — while untouched buckets keep the input params'
-        # device arrays (their values are unchanged)
+        # device arrays (their values are unchanged). Mesh-placed params
+        # (NamedSharding) keep their placement on shape-preserving edits so
+        # a pjit'd step over them recompiles nothing and re-transfers
+        # nothing; buckets that changed shape fall back to the default
+        # placement (the enclosing pjit re-constrains them).
         import jax
+        from jax.sharding import NamedSharding
 
-        up = jax.device_put(
-            ([self.tgt_d[i] for i in sorted(self.cross_touched)],
-             [self.src_d[i] for i in sorted(self.cross_touched)],
-             [self.leaf_d[i] for i in sorted(self.leaf_touched)]))
-        dtd = dict(zip(sorted(self.cross_touched), up[0]))
-        dsd = dict(zip(sorted(self.cross_touched), up[1]))
-        dld = dict(zip(sorted(self.leaf_touched), up[2]))
-        ctd = tuple(dtd.get(i, params.cross_tgt_d[i])
+        def _kept(old, new):
+            s = getattr(old, "sharding", None)
+            if (isinstance(s, NamedSharding)
+                    and tuple(getattr(old, "shape", ())) == np.shape(new)):
+                return s
+            return None
+
+        ct, lt = sorted(self.cross_touched), sorted(self.leaf_touched)
+        jobs = ([(("t", i), self.tgt_d[i], params.cross_tgt_d[i])
+                 for i in ct]
+                + [(("s", i), self.src_d[i], params.cross_src_d[i])
+                   for i in ct]
+                + [(("l", i), self.leaf_d[i], params.leaf_dists[i])
+                   for i in lt])
+        plain = [(k, a) for k, a, old in jobs if _kept(old, a) is None]
+        kept = [(k, a, _kept(old, a)) for k, a, old in jobs
+                if _kept(old, a) is not None]
+        up: dict = {}
+        if plain:
+            for (k, _), dev in zip(plain,
+                                   jax.device_put([a for _, a in plain])):
+                up[k] = dev
+        if kept:
+            put = jax.device_put([a for _, a, _ in kept],
+                                 [s for _, _, s in kept])
+            for (k, _, _), dev in zip(kept, put):
+                up[k] = dev
+        ctd = tuple(up.get(("t", i), params.cross_tgt_d[i])
                     for i in range(len(self.tgt_d)))
-        csd = tuple(dsd.get(i, params.cross_src_d[i])
+        csd = tuple(up.get(("s", i), params.cross_src_d[i])
                     for i in range(len(self.src_d)))
-        ld = tuple(dld.get(i, params.leaf_dists[i])
+        ld = tuple(up.get(("l", i), params.leaf_dists[i])
                    for i in range(len(self.leaf_d)))
         new_params = PlanParams(cross_tgt_d=ctd, cross_src_d=csd,
                                 leaf_dists=ld, tree_w=params.tree_w)

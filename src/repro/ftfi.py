@@ -32,6 +32,15 @@
     ftfi.validate(spec, params)                      # PlanValidationError
     Y = ftfi.apply_resilient(spec, params, fn, X, backend="pallas")
     fm = ftfi.resilient_fastmult(spec, fn)           # sticky demotions
+
+    # multi-device execution (see README "Multi-device execution"): the
+    # plan's index space is cut into per-device leaf blocks and run under
+    # shard_map — one all_to_all moves the halo rows, one psum_scatter
+    # reduces the partial outputs; exact (1e-6 parity vs single device)
+    with launch.sharding.use_sharding(mesh):         # or pass mesh=...
+        Y = ftfi.apply_sharded(spec, params, fn, X)
+        fm = jax.jit(ftfi.sharded_fastmult(spec, fn, mesh=mesh))
+    ftfi.shard_stats(spec, num_shards)               # block/halo/work stats
 """
 from repro.core import ladder, plan_cache, plan_guard  # noqa: F401
 from repro.core.ladder import (  # noqa: F401
@@ -40,3 +49,6 @@ from repro.core.plan_api import (  # noqa: F401
     KERNEL_MODES, PlanParams, PlanSpec, apply, build, describe, fastmult,
     load_plan, plan_from_spec, reweight, save_plan, specialize, update_plan)
 from repro.core.plan_guard import PlanValidationError, validate  # noqa: F401
+from repro.core.plan_shard import (  # noqa: F401
+    SHARD_LAYOUT_VERSION, apply_sharded, partition_plan, shard_stats,
+    sharded_fastmult)

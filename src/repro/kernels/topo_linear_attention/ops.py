@@ -277,3 +277,35 @@ def topo_linear_attention(qf, kf, v, coeffs, *, g: str = "exp",
     if use_kernel:
         return _fused(spec, qf, kf, v, coeffs)
     return _xla_forward(spec, qf, kf, v, coeffs)
+
+
+def topo_linear_attention_sharded(qf, kf, v, coeffs, *, mesh,
+                                  batch_axis: str = "data",
+                                  head_axis: str = "model", **kw):
+    """`topo_linear_attention` under shard_map: batch over the mesh's data
+    axis and heads over its model axis. Every (batch, head) pair's masked
+    linear-attention sweep is independent — each device runs the identical
+    fused sweep on its (B/d, H/m) slab with zero collectives, so the result
+    is bit-identical to the single-device call. An axis whose extent does
+    not divide the corresponding dim is dropped (that dim runs replicated),
+    mirroring `launch.sharding.shard`'s divisibility fallback."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    qf = jnp.asarray(qf)
+    B, H = qf.shape[0], qf.shape[1]
+    coeffs = jnp.asarray(coeffs, jnp.float32)
+    if coeffs.ndim == 1:
+        coeffs = jnp.broadcast_to(coeffs[None], (H, coeffs.shape[0]))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ba = batch_axis if B % sizes.get(batch_axis, 1) == 0 else None
+    ha = head_axis if H % sizes.get(head_axis, 1) == 0 else None
+    if ba is None and ha is None:
+        return topo_linear_attention(qf, kf, v, coeffs, **kw)
+
+    def local(q, k, vv, c):
+        return topo_linear_attention(q, k, vv, c, **kw)
+
+    io = P(ba, ha)
+    return shard_map(local, mesh=mesh, in_specs=(io, io, io, P(ha)),
+                     out_specs=io, check_rep=False)(qf, kf, v, coeffs)

@@ -31,6 +31,16 @@ DEFAULT_RULES = {
     "state": None,
     "kv_lora": None,
     "frames": None,
+    # FTFI plan axes (core.plan_shard): the plan's vertex index space is
+    # cut into per-device leaf blocks over `data`; cross-bucket source /
+    # target group spaces follow their jobs onto the same axis; whole trees
+    # of a packed Forest land per shard ("tree"); batched field columns ride
+    # the batch axes
+    "plan_leaves": "data",
+    "cross_src": "data",
+    "cross_tgt": "data",
+    "tree": "data",
+    "field_batch": ("pod", "data"),
 }
 
 _rules_var: contextvars.ContextVar = contextvars.ContextVar("rules", default=None)
@@ -240,3 +250,17 @@ def named_sharding(spec: P):
 
 def current_mesh():
     return _mesh_var.get()
+
+
+def plan_axis(mesh=None) -> str | None:
+    """Mesh axis carrying the FTFI `plan_leaves` logical axis (leaf-block
+    sharding of the plan executor). Falls back to "data" (or the mesh's
+    first axis) when the active rules don't bind it."""
+    rules = _rules_var.get()
+    ax = (rules or DEFAULT_RULES).get("plan_leaves", "data")
+    if isinstance(ax, tuple):
+        ax = ax[0] if ax else None
+    mesh = mesh if mesh is not None else _mesh_var.get()
+    if mesh is not None and ax not in mesh.axis_names:
+        ax = "data" if "data" in mesh.axis_names else mesh.axis_names[0]
+    return ax

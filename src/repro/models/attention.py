@@ -477,6 +477,12 @@ def topo_attention_train(cfg, p, p_topo, x, positions, causal=True):
     scale = topo_logit_scale(cfg, p_topo)  # (H,)
     qf = phi_features(q * scale[None, None, :, None], cfg.performer_phi)
     kf = phi_features(k, cfg.performer_phi)
+    # multi-device: the masked linear-attention sweep is independent per
+    # (batch, head) — keep the phi fields partitioned batch-over-data and
+    # heads-over-model so pjit never gathers the full (B, L, H, m) field
+    qf = shard(qf, ("field_batch", None, "heads", None))
+    kf = shard(kf, ("field_batch", None, "heads", None))
+    v = shard(v, ("field_batch", None, "heads", None))
     coeffs = topo_mask_coeffs(cfg, p_topo)  # (H, t+1)
     s = cfg.topo_dist_scale
     impl = getattr(cfg, "topo_attn_impl", "fft")
@@ -512,6 +518,7 @@ def topo_attention_train(cfg, p, p_topo, x, positions, causal=True):
         out = linear_attention_output(num, den)
     else:
         out = _topo_fft_attention(cfg, qf, kf, v, coeffs, causal)
+    out = shard(out, ("field_batch", None, "heads", None))
     H, hd = cfg.num_heads, cfg.head_dim
     out = out.astype(x.dtype).reshape(B, L, H * hd) @ p["wo"]
     return out

@@ -155,8 +155,9 @@ def topo_vit_attention(cfg, p, p_topo, x, integ):
         out = masked_attention_bruteforce(
             qf_, kf_, v_, mask_f(cfg.topo_g, coeffs, cfg.topo_dist_scale)(D))
     else:
-        fastmult = make_tree_fastmult(integ, cfg.topo_g, coeffs,
-                                      cfg.topo_dist_scale)
+        fastmult = make_tree_fastmult(
+            integ, cfg.topo_g, coeffs, cfg.topo_dist_scale,
+            sharded=getattr(cfg, "topo_shard_plan", False))
         out = masked_linear_attention(qf_, kf_, v_, fastmult)
     out = out.transpose(0, 2, 1, 3).reshape(B, L, -1).astype(x.dtype)
     return out @ p["attn"]["wo"]

@@ -165,7 +165,26 @@ class ServeEngine:
                 f"evictions={st['evictions']} "
                 f"demotions={lad['demotions']} blocked={blocked} "
                 f"validations={st['plan_guard']['validations']} "
-                f"(rejected {st['plan_guard']['failures']})")
+                f"(rejected {st['plan_guard']['failures']}) "
+                f"{self.mesh_banner()}")
+
+    def mesh_banner(self) -> str:
+        """Mesh/device provenance segment: how many devices this process
+        sees versus what the preloaded plan artifact was sharded for."""
+        import jax
+
+        from repro.core.plan_shard import SHARD_LAYOUT_VERSION
+
+        seg = f"devices={jax.device_count()}"
+        s = self.plan_spec
+        if s is not None and int(getattr(s, "shard_layout", 0) or 0):
+            axes = ",".join(getattr(s, "mesh_axes", ()) or ()) or "-"
+            seg += (f" plan_mesh={int(s.mesh_devices)}({axes}) "
+                    f"shard_layout=v{int(s.shard_layout)}/"
+                    f"v{SHARD_LAYOUT_VERSION}")
+        else:
+            seg += " plan_mesh=unsharded"
+        return seg
 
     def submit(self, req: Request):
         req._submit_tick = self._tick

@@ -67,3 +67,38 @@ print("NO_DOUBLE_OK")
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True, timeout=300)
     assert "NO_DOUBLE_OK" in out.stdout, (out.stdout[-800:], out.stderr[-2000:])
+
+
+def test_ftfi_logical_axes():
+    """The FTFI plan axes resolve to the data axis (leaf blocks / cross
+    groups / trees shard together), field_batch to the batch axes, and
+    `plan_axis` survives meshes without a data axis."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.launch import sharding as SH
+
+for name in ("plan_leaves", "cross_src", "cross_tgt", "tree"):
+    assert SH.DEFAULT_RULES[name] == "data", name
+assert "data" in SH.DEFAULT_RULES["field_batch"]
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+with SH.use_sharding(mesh):
+    assert SH.logical_to_spec(("plan_leaves",)) == P("data")
+    assert SH.logical_to_spec(("cross_src",)) == P("data")
+    assert SH.logical_to_spec(("field_batch", None)) == P(("data",), None)
+    # plan_leaves and cross_tgt both bind data: second occurrence drops
+    spec = SH.logical_to_spec(("plan_leaves", "cross_tgt"))
+    assert spec == P("data", None), spec
+    assert SH.plan_axis() == "data"
+assert SH.plan_axis(mesh) == "data"
+m2 = jax.make_mesh((8,), ("model",))
+assert SH.plan_axis(m2) == "model"  # no data axis: first axis fallback
+print("FTFI_AXES_OK")
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.abspath("src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert "FTFI_AXES_OK" in out.stdout, (out.stdout[-800:], out.stderr[-2000:])
