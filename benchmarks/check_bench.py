@@ -38,6 +38,14 @@ to --robustness-json (default BENCH_robustness.json). Fails when:
     post-write disk-cache corruption, serve slot/step crash — fails to
     recover or degrade to the host-exact output.
 
+--suite serve gates BENCH_serve.json (written by bench_serve): every row
+must carry a recorded p99 (end-to-end AND time-to-first-token) and pass the
+fused-vs-replay greedy parity cross-check, and at every prompt length >=
+--serve-gate-len (default 32) the fused engine's prompt-processing
+throughput (prefill_tok_s) must be at least --serve-min-speedup x replay's
+— tripping it means the fused prefill-into-cache path regressed to (or
+below) token-by-token replay.
+
 --suite sharding gates the weak-scaling rows bench_ftfi_runtime --devices
 wrote into BENCH_ftfi_runtime.json: every sharded row's parity rel_err vs
 the single-device jitted executor must stay under --sharding-rel-err
@@ -49,6 +57,7 @@ plan's flat entries).
   PYTHONPATH=src python -m benchmarks.check_bench --suite topo BENCH_topo_attention.json
   PYTHONPATH=src python -m benchmarks.check_bench --suite robustness
   PYTHONPATH=src python -m benchmarks.check_bench --suite sharding BENCH_ftfi_runtime.json
+  PYTHONPATH=src python -m benchmarks.check_bench --suite serve BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -275,6 +284,44 @@ def check_topo_json(path: str, max_rel_err: float) -> list[str]:
     return errors
 
 
+def check_serve_json(path: str, gate_len: int,
+                     min_speedup: float) -> list[str]:
+    """Serving gate over bench_serve rows: latency percentiles recorded,
+    fused==replay greedy parity, and fused prompt throughput >= min_speedup
+    x replay's at every prompt length >= gate_len."""
+    with open(path) as fh:
+        rows = json.load(fh)["rows"]
+    errors = []
+    if not rows:
+        errors.append(f"{path}: no benchmark rows")
+    by = {}
+    for r in rows:
+        where = f"{r['mode']}/pl{r['prompt_len']}"
+        by[(r["mode"], r["prompt_len"])] = r
+        for k in ("p99_ms", "ttft_p99_ms", "p50_ms", "ttft_p50_ms"):
+            if r.get(k) is None:
+                errors.append(f"{where}: {k} not recorded")
+        if not r.get("parity_ok", False):
+            errors.append(f"{where}: fused-vs-replay greedy parity failed "
+                          "(or was not cross-checked)")
+        if r.get("failed", 0):
+            errors.append(f"{where}: {r['failed']} requests failed")
+    gated = [pl for (m, pl) in by if m == "fused" and pl >= gate_len
+             and ("replay", pl) in by]
+    if not gated:
+        errors.append(f"{path}: no fused/replay pair at prompt_len >= "
+                      f"{gate_len} — the throughput gate did not run")
+    for pl in gated:
+        f, rp = by[("fused", pl)], by[("replay", pl)]
+        if f["prefill_tok_s"] < min_speedup * rp["prefill_tok_s"]:
+            errors.append(
+                f"fused/pl{pl}: prefill {f['prefill_tok_s']:.0f} tok/s < "
+                f"{min_speedup:.1f}x replay's {rp['prefill_tok_s']:.0f} "
+                "tok/s (fused prefill-into-cache regressed to replay "
+                "speed)")
+    return errors
+
+
 def check_robustness(out_path: str, guard_overhead: float,
                      ladder_rel_err: float) -> list[str]:
     """Live robustness gate + fault-matrix artifact. Every row must either
@@ -486,7 +533,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("json", nargs="?", default="BENCH_ftfi_runtime.json")
     ap.add_argument("--suite",
-                    choices=("ftfi", "topo", "robustness", "sharding"),
+                    choices=("ftfi", "topo", "robustness", "sharding",
+                             "serve"),
                     default="ftfi")
     ap.add_argument("--max-rel-err", type=float, default=1e-4)
     ap.add_argument("--it-n", type=int, default=2000)
@@ -518,9 +566,18 @@ def main() -> None:
     ap.add_argument("--max-work-frac", type=float, default=0.75,
                     help="max per-device flat work as a fraction of the "
                     "global plan on multi-device sharded rows")
+    ap.add_argument("--serve-gate-len", type=int, default=32,
+                    help="prompt length from which fused prefill must beat "
+                    "replay throughput (--suite serve)")
+    ap.add_argument("--serve-min-speedup", type=float, default=1.0,
+                    help="min fused/replay prefill tok/s ratio at gated "
+                    "prompt lengths (--suite serve)")
     args = ap.parse_args()
 
-    if args.suite == "robustness":
+    if args.suite == "serve":
+        errors = check_serve_json(args.json, args.serve_gate_len,
+                                  args.serve_min_speedup)
+    elif args.suite == "robustness":
         errors = check_robustness(args.robustness_json, args.guard_overhead,
                                   args.ladder_rel_err)
     elif args.suite == "sharding":

@@ -26,6 +26,20 @@ def prefill_fn(cfg, params, batch):
     return lm.forward_prefill(cfg, params, batch)
 
 
+def prefill_into_cache(cfg, params, cache, tokens, lengths, S, tree_mask=None):
+    """Fused prefill: run whole (right-padded) prompts through one forward
+    pass AND write the decode cache. Returns (last-real-token logits (B, V),
+    new_cache). Rows with lengths[b] == 0 keep their cache untouched.
+    Encoder-decoder families don't support this path (the engine falls back
+    to decode replay)."""
+    if cfg.is_encdec:
+        raise NotImplementedError(
+            "fused prefill-into-cache is decoder-only; encdec serves via "
+            "decode replay")
+    return lm.forward_prefill_into_cache(cfg, params, cache, tokens, lengths,
+                                         S, tree_mask=tree_mask)
+
+
 def init_cache(cfg, B, S):
     if cfg.is_encdec:
         return encdec.init_decode_cache(cfg, B, S)

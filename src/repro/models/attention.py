@@ -79,6 +79,17 @@ def topo_init(key, cfg, dtype=jnp.float32):
 # ----------------------------------------------------------------------------
 
 
+def _positions_vec(pos, B):
+    """Decode positions as a (B,) int32 vector. A scalar () broadcasts to the
+    whole batch (lockstep decode); a (B,) vector passes through unchanged —
+    per-slot positions are what make mid-wave admission legal in the serve
+    engine (each slot writes/masks its own KV row independently)."""
+    p = jnp.asarray(pos, jnp.int32)
+    if p.ndim == 0:
+        p = jnp.broadcast_to(p, (B,))
+    return p
+
+
 def _project_qkv(cfg, p, x, positions, rope=True):
     B, L, _ = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -201,21 +212,50 @@ def full_attention_train(cfg, p, x, positions, causal=True, window=0,
 
 
 def full_attention_decode(cfg, p, x, pos, cache, window=0, rope=True):
-    """One-token decode. cache: {'k','v'} (B,S,KV,hd); pos: () int32."""
+    """One-token decode. cache: {'k','v'} (B,S,KV,hd); pos: () or (B,) int32
+    (per-slot positions — each batch row writes and masks its own row)."""
     B = x.shape[0]
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos_v = _positions_vec(pos, B)
+    positions = pos_v[:, None]
     q, k_new, v_new = _project_qkv(cfg, p, x, positions, rope=rope)
     S = cache["k"].shape[1]
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    rows = jnp.arange(B)
+    k = cache["k"].at[rows, pos_v].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[rows, pos_v].set(v_new[:, 0].astype(cache["v"].dtype))
     idx = jnp.arange(S)
-    mask = idx[None, None, :] <= pos
+    mask = idx[None, None, :] <= pos_v[:, None, None]  # (B,1,S)
     if window and window > 0:
-        mask = mask & (idx[None, None, :] > pos - window)
-    out = _sdpa(cfg, q, k, v, mask[:, None] if mask.ndim == 3 else mask)
+        mask = mask & (idx[None, None, :] > pos_v[:, None, None] - window)
+    out = _sdpa(cfg, q, k, v, mask[:, None])
     out = out.reshape(B, 1, H * hd) @ p["wo"]
     return out, {"k": k, "v": v}
+
+
+def full_attention_prefill(cfg, p, x, positions, lengths, cache,
+                           window=0, rope=True):
+    """Whole-prompt prefill that writes KV rows [0, Lp) straight into the
+    decode cache (the fused replacement for replaying prompt tokens through
+    decode). x: (B, Lp, d); lengths: (B,) — rows with lengths[b] == 0 keep
+    their cache untouched (they belong to other live slots). Rows at or past
+    lengths[b] may hold junk keys: decode at position q rewrites row q before
+    its own causal mask can see it, so they are always overwritten-before-
+    read. Returns (out (B, Lp, d), new_cache)."""
+    B, Lp, _ = x.shape
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions, rope=rope)
+    idx = jnp.arange(Lp)
+    mask = (idx[:, None] >= idx[None, :])[None]  # causal (1,Lp,Lp)
+    if window and window > 0:
+        mask = mask & (idx[None, :, None] - idx[None, None, :] < window)
+    out = _sdpa(cfg, q, k_new, v_new, mask[:, None])
+    out = out.reshape(B, Lp, -1) @ p["wo"]
+    valid = (lengths > 0)[:, None, None, None]
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), 0, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), 0, axis=1)
+    return out, {"k": jnp.where(valid, k, cache["k"]),
+                 "v": jnp.where(valid, v, cache["v"])}
 
 
 def local_attention_decode_init(cfg, B, dtype):
@@ -223,28 +263,65 @@ def local_attention_decode_init(cfg, B, dtype):
     KV, hd = cfg.num_kv_heads, cfg.head_dim
     return {"k": jnp.zeros((B, W, KV, hd), dtype),
             "v": jnp.zeros((B, W, KV, hd), dtype),
-            "kpos": jnp.full((W,), -1, jnp.int32)}
+            "kpos": jnp.full((B, W), -1, jnp.int32)}
 
 
 def local_attention_decode(cfg, p, x, pos, cache):
-    """Sliding-window decode with a ring buffer of size W (positions stored
-    alongside keys; RoPE applied at write time with the true position)."""
+    """Sliding-window decode with a per-slot ring buffer of size W (positions
+    stored alongside keys; RoPE applied at write time with the true
+    position). pos: () or (B,) int32."""
     B = x.shape[0]
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     W = cfg.local_window
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos_v = _positions_vec(pos, B)
+    positions = pos_v[:, None]
     q, k_new, v_new = _project_qkv(cfg, p, x, positions)
-    slot = jnp.mod(pos, W)
-    k = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
-    kpos = jax.lax.dynamic_update_slice(
-        cache["kpos"], jnp.reshape(pos, (1,)).astype(jnp.int32), (slot,))
-    mask = (kpos >= 0) & (kpos <= pos)  # ring size enforces the window
-    out = _sdpa(cfg, q, k, v, mask[None, None, None, :])
+    slot = jnp.mod(pos_v, W)
+    rows = jnp.arange(B)
+    k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    kpos = cache["kpos"].at[rows, slot].set(pos_v)
+    mask = (kpos >= 0) & (kpos <= pos_v[:, None])  # ring enforces the window
+    out = _sdpa(cfg, q, k, v, mask[:, None, None, :])
     out = out.reshape(B, 1, H * hd) @ p["wo"]
     return out, {"k": k, "v": v, "kpos": kpos}
+
+
+def local_attention_prefill(cfg, p, x, positions, lengths, cache):
+    """Fused prefill for the sliding-window ring buffer: attention over the
+    prompt with the window mask, then the last min(W, lengths[b]) tokens of
+    each valid row are scattered into their ring slots (position p lives at
+    p % W) with kpos = -1 everywhere else. Unlike the (B, S) cache, junk
+    rows here WOULD be visible to later decode steps, so the ring is built
+    explicitly from valid tokens only."""
+    B, Lp, _ = x.shape
+    W = cfg.local_window
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    idx = jnp.arange(Lp)
+    mask = ((idx[:, None] >= idx[None, :])
+            & (idx[:, None] - idx[None, :] < W))[None]
+    out = _sdpa(cfg, q, k_new, v_new, mask[:, None])
+    out = out.reshape(B, Lp, -1) @ p["wo"]
+    widx = lengths[:, None] - W + jnp.arange(W)[None, :]  # (B, W) positions
+    valid_w = (widx >= 0) & (lengths[:, None] > 0)
+    gidx = jnp.clip(widx, 0, max(Lp - 1, 0))
+    rows = jnp.arange(B)[:, None]
+    kg = jnp.where(valid_w[..., None, None], k_new[rows, gidx], 0.0)
+    vg = jnp.where(valid_w[..., None, None], v_new[rows, gidx], 0.0)
+    # W consecutive positions hit W distinct ring slots: scatter is safe
+    slot_idx = jnp.mod(widx, W)
+    ring_k = jnp.zeros_like(cache["k"]).at[rows, slot_idx].set(
+        kg.astype(cache["k"].dtype))
+    ring_v = jnp.zeros_like(cache["v"]).at[rows, slot_idx].set(
+        vg.astype(cache["v"].dtype))
+    ring_p = jnp.full_like(cache["kpos"], -1).at[rows, slot_idx].set(
+        jnp.where(valid_w, widx, -1).astype(jnp.int32))
+    valid = lengths > 0
+    return out, {
+        "k": jnp.where(valid[:, None, None, None], ring_k, cache["k"]),
+        "v": jnp.where(valid[:, None, None, None], ring_v, cache["v"]),
+        "kpos": jnp.where(valid[:, None], ring_p, cache["kpos"]),
+    }
 
 
 # ----------------------------------------------------------------------------
@@ -310,15 +387,17 @@ def mla_attention_decode(cfg, p, x, pos, cache):
     H = cfg.num_heads
     nope, rope, vdim, r_kv = (cfg.qk_nope_dim, cfg.qk_rope_dim,
                               cfg.v_head_dim, cfg.kv_lora_rank)
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos_v = _positions_vec(pos, B)
+    positions = pos_v[:, None]
     q_nope, q_rope = _mla_q(cfg, p, x, positions)  # (B,1,H,*)
     ckv_new = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps, plus_one=True)
     krope_new = apply_rope((x @ p["w_kr"]).reshape(B, 1, 1, rope), positions,
                            cfg.rope_theta)
-    ckv = jax.lax.dynamic_update_slice_in_dim(
-        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1)
-    krope = jax.lax.dynamic_update_slice_in_dim(
-        cache["krope"], krope_new[:, :, 0].astype(cache["krope"].dtype), pos, axis=1)
+    rows = jnp.arange(B)
+    ckv = cache["ckv"].at[rows, pos_v].set(
+        ckv_new[:, 0].astype(cache["ckv"].dtype))
+    krope = cache["krope"].at[rows, pos_v].set(
+        krope_new[:, 0, 0].astype(cache["krope"].dtype))
     # absorb: W_ukv columns split into per-head W_uk (r,nope) and W_uv (r,vdim)
     w_ukv = p["w_ukv"].reshape(r_kv, H, nope + vdim)
     w_uk, w_uv = w_ukv[..., :nope], w_ukv[..., nope:]
@@ -329,13 +408,34 @@ def mla_attention_decode(cfg, p, x, pos, cache):
               + jnp.einsum("blhr,bsr->bhls", q_rope.astype(jnp.float32),
                            krope.astype(jnp.float32))) * scale
     S = ckv.shape[1]
-    mask = jnp.arange(S)[None, None, None, :] <= pos
+    mask = jnp.arange(S)[None, None, None, :] <= pos_v[:, None, None, None]
     logits = jnp.where(mask, logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
     out_lat = jnp.einsum("bhls,bsr->blhr", w, ckv.astype(jnp.float32))
     out = jnp.einsum("blhr,rhv->blhv", out_lat, w_uv.astype(jnp.float32))
     out = out.astype(x.dtype).reshape(B, 1, H * vdim) @ p["wo"]
     return out, {"ckv": ckv, "krope": krope}
+
+
+def mla_attention_prefill(cfg, p, x, positions, lengths, cache):
+    """Fused MLA prefill: train-path attention over the prompt plus a direct
+    write of the latent (c_kv, k_rope) rows [0, Lp) into the decode cache.
+    Junk rows past lengths[b] are overwritten-before-read exactly as in
+    `full_attention_prefill`; rows with lengths[b] == 0 are untouched."""
+    B, Lp, _ = x.shape
+    rope = cfg.qk_rope_dim
+    out = mla_attention_train(cfg, p, x, positions, causal=True)
+    ckv_new = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps,
+                       plus_one=True)
+    krope_new = apply_rope((x @ p["w_kr"]).reshape(B, Lp, 1, rope), positions,
+                           cfg.rope_theta)[:, :, 0]
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), 0, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(
+        cache["krope"], krope_new.astype(cache["krope"].dtype), 0, axis=1)
+    valid = (lengths > 0)[:, None, None]
+    return out, {"ckv": jnp.where(valid, ckv, cache["ckv"]),
+                 "krope": jnp.where(valid, krope, cache["krope"])}
 
 
 # ----------------------------------------------------------------------------
@@ -622,10 +722,13 @@ def topo_decode_init(cfg, B, L, dtype=jnp.float32, rank: int = 24):
 
 
 def topo_attention_decode(cfg, p, p_topo, x, pos, cache, L: int, rank: int = 24):
-    """O(1)-state masked linear attention decode step."""
+    """O(1)-state masked linear attention decode step. pos: () or (B,) —
+    alpha/beta are evaluated per slot position (vmapped), so slots at
+    different sequence depths share one batched step."""
     B = x.shape[0]
     H, hd = cfg.num_heads, cfg.head_dim
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos_v = _positions_vec(pos, B)
+    positions = pos_v[:, None]
     q, k, v = _project_qkv(cfg, p, x, positions, rope=False)
     k, v = _expand_kv(cfg, k, v)
     scale = topo_logit_scale(cfg, p_topo)  # (H,)
@@ -633,16 +736,102 @@ def topo_attention_decode(cfg, p, p_topo, x, pos, cache, L: int, rank: int = 24)
     kf = phi_features(k[:, 0], cfg.performer_phi)
     coeffs = topo_mask_coeffs(cfg, p_topo)
     alpha, beta, R = topo_decomposition(cfg, coeffs, L, rank)
-    b = beta(jnp.asarray(pos, jnp.float32))  # (H,R)
-    S = cache["S"] + b[None, :, :, None, None] * (
+    pos_f = pos_v.astype(jnp.float32)
+    b = jax.vmap(beta)(pos_f)  # (B,H,R)
+    S = cache["S"] + b[:, :, :, None, None] * (
         kf[:, :, None, :, None] * v[:, 0].astype(jnp.float32)[:, :, None, None, :])
-    z = cache["z"] + b[None, :, :, None] * kf[:, :, None, :]
-    a = alpha(jnp.asarray(pos, jnp.float32))  # (H,R)
-    num = jnp.einsum("bhm,bhrmv,hr->bhv", qf, S, a)
-    den = jnp.einsum("bhm,bhrm,hr->bh", qf, z, a)
+    z = cache["z"] + b[:, :, :, None] * kf[:, :, None, :]
+    a = jax.vmap(alpha)(pos_f)  # (B,H,R)
+    num = jnp.einsum("bhm,bhrmv,bhr->bhv", qf, S, a)
+    den = jnp.einsum("bhm,bhrm,bhr->bh", qf, z, a)
     den = jnp.where(jnp.abs(den) < 1e-6, 1e-6, den)
     out = (num / den[..., None]).astype(x.dtype).reshape(B, 1, H * hd) @ p["wo"]
     return out, {"S": S, "z": z}
+
+
+def topo_attention_prefill(cfg, p, p_topo, x, positions, lengths, cache,
+                           L: int, rank: int = 24, tree_mask=None):
+    """Fused topo prefill: exact train-path attention over the prompt plus
+    the closed-form cordial decode state for the prompt tokens,
+
+        S = sum_{j < len_b} beta(j) kf_j (x) v_j,
+        z = sum_{j < len_b} beta(j) kf_j,
+
+    written (set, not accumulated) into the cache so a reused slot never
+    inherits a previous request's state. Rows with lengths[b] == 0 keep
+    their state untouched.
+
+    `tree_mask` (optional) replaces the sequence Toeplitz mask with a
+    per-request tree mask served from a packed forest plan (see
+    serve.forest_masks): {'make_fastmult': coeffs -> FastMult over the
+    packed row space, 'pack': (N,) packed-row -> flat b*Lp+l token index
+    (-1 = foreign block), 'unpack': (B*Lp,) token -> packed row (-1 = not
+    in a tree)}. The prompt attends bidirectionally under the tree metric
+    (prefix-LM style — the prompt is completed context); generated tokens
+    continue through the causal cordial recurrence."""
+    B, Lp, _ = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    if tree_mask is None:
+        out = topo_attention_train(cfg, p, p_topo, x, positions, causal=True)
+    else:
+        out = _topo_tree_masked_attention(cfg, p, p_topo, x, positions,
+                                          tree_mask)
+    q, k, v = _project_qkv(cfg, p, x, positions, rope=False)
+    k, v = _expand_kv(cfg, k, v)
+    kf = phi_features(k, cfg.performer_phi)  # (B,Lp,H,m)
+    coeffs = topo_mask_coeffs(cfg, p_topo)
+    alpha, beta, R = topo_decomposition(cfg, coeffs, L, rank)
+    bet = jax.vmap(beta)(jnp.arange(Lp, dtype=jnp.float32))  # (Lp,H,R)
+    vmask = (jnp.arange(Lp)[None, :] < lengths[:, None]).astype(jnp.float32)
+    S = jnp.einsum("blhm,blhv,lhr,bl->bhrmv", kf,
+                   v.astype(jnp.float32), bet, vmask)
+    z = jnp.einsum("blhm,lhr,bl->bhrm", kf, bet, vmask)
+    valid = lengths > 0
+    return out, {
+        "S": jnp.where(valid[:, None, None, None, None],
+                       S.astype(cache["S"].dtype), cache["S"]),
+        "z": jnp.where(valid[:, None, None, None],
+                       z.astype(cache["z"].dtype), cache["z"]),
+    }
+
+
+def _topo_tree_masked_attention(cfg, p, p_topo, x, positions, tree_mask):
+    """Masked linear attention (Alg. 1) under per-request TREE masks: tokens
+    are packed into their forest rows, ONE block-diagonal plan execution
+    applies every request's own M_t = [f(dist_{T_t}(i, j))], and outputs
+    scatter back to (B, Lp). Tokens outside any tree block get zero
+    attention output (their rows are junk padding by construction)."""
+    from repro.core.masks import masked_linear_attention
+
+    B, Lp, _ = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    q, k, v = _project_qkv(cfg, p, x, positions, rope=False)
+    k, v = _expand_kv(cfg, k, v)
+    scale = topo_logit_scale(cfg, p_topo)
+    qf = phi_features(q * scale[None, None, :, None], cfg.performer_phi)
+    kf = phi_features(k, cfg.performer_phi)
+    m = qf.shape[-1]
+    pack = tree_mask["pack"]      # (N,) packed row -> flat token (or -1)
+    unpack = tree_mask["unpack"]  # (B*Lp,) flat token -> packed row (or -1)
+    take = jnp.clip(pack, 0)
+    in_tree = (pack >= 0).astype(jnp.float32)[:, None, None]
+    qp = jnp.moveaxis(qf.reshape(B * Lp, H, m)[take] * in_tree, 1, 0)
+    kp = jnp.moveaxis(kf.reshape(B * Lp, H, m)[take] * in_tree, 1, 0)
+    vp = jnp.moveaxis(
+        v.astype(jnp.float32).reshape(B * Lp, H, hd)[take] * in_tree, 1, 0)
+    coeffs = topo_mask_coeffs(cfg, p_topo)  # (H, t+1)
+    mk = tree_mask["make_fastmult"]
+    if cfg.topo_synced:
+        out_p = masked_linear_attention(qp, kp, vp, mk(coeffs[0]))
+    else:
+        out_p = jnp.stack([
+            masked_linear_attention(qp[h], kp[h], vp[h], mk(coeffs[h]))
+            for h in range(H)])
+    sel = jnp.clip(unpack, 0)
+    out_tok = jnp.moveaxis(out_p, 0, 1)[sel]  # (B*Lp, H, hd)
+    out_tok = out_tok * (unpack >= 0).astype(out_tok.dtype)[:, None, None]
+    out = out_tok.reshape(B, Lp, H, hd)
+    return out.astype(x.dtype).reshape(B, Lp, H * hd) @ p["wo"]
 
 
 # --- plain performer decode (unmasked linear attention state) ----------------
@@ -672,7 +861,7 @@ def performer_attention_train(cfg, p, x, positions, causal=True):
 def performer_attention_decode(cfg, p, x, pos, cache):
     B = x.shape[0]
     H, hd = cfg.num_heads, cfg.head_dim
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions = _positions_vec(pos, B)[:, None]
     q, k, v = _project_qkv(cfg, p, x, positions, rope=False)
     k, v = _expand_kv(cfg, k, v)
     qf = phi_features(q[:, 0], cfg.performer_phi)
@@ -684,3 +873,24 @@ def performer_attention_decode(cfg, p, x, pos, cache):
     den = jnp.where(jnp.abs(den) < 1e-6, 1e-6, den)
     out = (num / den[..., None]).astype(x.dtype).reshape(B, 1, H * hd) @ p["wo"]
     return out, {"S": S, "z": z}
+
+
+def performer_attention_prefill(cfg, p, x, positions, lengths, cache):
+    """Fused performer prefill: train-path attention over the prompt plus the
+    closed-form linear-attention state (beta = 1) for the prompt tokens,
+    overwriting any stale state in reused slots."""
+    B, Lp, _ = x.shape
+    out = performer_attention_train(cfg, p, x, positions, causal=True)
+    _, k, v = _project_qkv(cfg, p, x, positions, rope=False)
+    k, v = _expand_kv(cfg, k, v)
+    kf = phi_features(k, cfg.performer_phi)  # (B,Lp,H,m)
+    vmask = (jnp.arange(Lp)[None, :] < lengths[:, None]).astype(jnp.float32)
+    S = jnp.einsum("blhm,blhv,bl->bhmv", kf, v.astype(jnp.float32), vmask)
+    z = jnp.einsum("blhm,bl->bhm", kf, vmask)
+    valid = lengths > 0
+    return out, {
+        "S": jnp.where(valid[:, None, None, None],
+                       S.astype(cache["S"].dtype), cache["S"]),
+        "z": jnp.where(valid[:, None, None],
+                       z.astype(cache["z"].dtype), cache["z"]),
+    }

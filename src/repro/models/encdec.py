@@ -174,7 +174,6 @@ def forward_decode(cfg, params, cache, token, pos, S):
             y, c_self = A.full_attention_decode(cfg, p["attn"], h, pos, c_self)
         x = x + y
         h = rms_norm(x, p["cross_norm"]["scale"], cfg.norm_eps, plus_one=True)
-        positions = jnp.full((B, 1), pos, jnp.int32)
         q = (h @ p["cross_attn"]["wq"]).reshape(B, 1, cfg.num_heads, cfg.head_dim)
         y = A._sdpa(cfg, q, ck, cv, mem_mask)
         x = x + y.reshape(B, 1, -1) @ p["cross_attn"]["wo"]

@@ -145,6 +145,53 @@ def _block_decode(cfg, kind, p, x, pos, cache, S, window=0):
     return x, cache
 
 
+def _block_prefill(cfg, kind, p, x, positions, lengths, cache, S, window=0,
+                   tree_mask=None):
+    """Whole-prompt forward (same math as `_block_train`) that also writes
+    the decode cache for positions [0, lengths[b]). x: (B, Lp, d) right-
+    padded; rows with lengths[b] == 0 leave their cache untouched (they
+    belong to other live serve slots). Returns (x, new_cache)."""
+    if kind in ("attn_mlp", "attn_local_mlp", "attn_only", "moe"):
+        h = rms_norm(x, p["attn_norm"]["scale"], cfg.norm_eps, plus_one=True)
+        if cfg.mla:
+            y, cache = A.mla_attention_prefill(cfg, p["attn"], h, positions,
+                                               lengths, cache)
+        elif cfg.attention_variant == "topo":
+            y, cache = A.topo_attention_prefill(cfg, p["attn"], p["topo"], h,
+                                                positions, lengths, cache,
+                                                L=S, tree_mask=tree_mask)
+        elif cfg.attention_variant == "performer":
+            y, cache = A.performer_attention_prefill(cfg, p["attn"], h,
+                                                     positions, lengths, cache)
+        elif kind == "attn_local_mlp":
+            y, cache = A.local_attention_prefill(cfg, p["attn"], h, positions,
+                                                 lengths, cache)
+        else:
+            y, cache = A.full_attention_prefill(cfg, p["attn"], h, positions,
+                                                lengths, cache)
+        x = x + y
+        if kind == "moe":
+            h = rms_norm(x, p["mlp_norm"]["scale"], cfg.norm_eps, plus_one=True)
+            y, _ = MOE.moe_block(cfg, p["moe"], h)
+            x = x + y
+        elif kind != "attn_only":
+            h = rms_norm(x, p["mlp_norm"]["scale"], cfg.norm_eps, plus_one=True)
+            x = x + gated_mlp(p["mlp"], h, cfg.mlp_act)
+    elif kind == "mamba":
+        h = rms_norm(x, p["norm"]["scale"], cfg.norm_eps, plus_one=True)
+        y, cache = SSM.mamba_block_prefill(cfg, p["ssm"], h, lengths, cache)
+        x = x + y
+    elif kind == "rec_mlp":
+        h = rms_norm(x, p["norm"]["scale"], cfg.norm_eps, plus_one=True)
+        y, cache = RG.lru_block_prefill(cfg, p["lru"], h, lengths, cache)
+        x = x + y
+        h = rms_norm(x, p["mlp_norm"]["scale"], cfg.norm_eps, plus_one=True)
+        x = x + gated_mlp(p["mlp"], h, cfg.mlp_act)
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
 def _block_cache_init(cfg, kind, B, S, dtype):
     if kind in ("attn_mlp", "attn_local_mlp", "attn_only", "moe"):
         if cfg.mla:
@@ -485,4 +532,81 @@ def forward_decode(cfg, params, cache, token, pos, S):
             new_cache[f"blocks{si}"] = nc
     x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps, plus_one=True)
     logits = unembed(cfg, params, x)
+    return logits, new_cache
+
+
+def forward_prefill_into_cache(cfg, params, cache, tokens, lengths, S,
+                               tree_mask=None):
+    """Fused prefill: run the whole (right-padded) prompt batch through one
+    forward pass AND write each row's KV / recurrent state into the decode
+    cache — replacing the token-by-token decode replay loop.
+
+    tokens: (B, Lp) int32, right-padded; lengths: (B,) int32 — rows with
+    lengths[b] == 0 are not part of this prefill group and keep their cache
+    untouched (they may belong to other live serve slots). tree_mask (topo
+    only) applies a packed-forest FTFI mask over the prompt region. Returns
+    (logits (B, V) for each row's last real token, new_cache)."""
+    B, Lp = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    positions = jnp.broadcast_to(jnp.arange(Lp, dtype=jnp.int32)[None], (B, Lp))
+    x = shard(x, ("batch", "seq", "embed"))
+    new_cache = {}
+    for si, (kind, count, scanned) in enumerate(stack_desc(cfg).segments):
+        if count == 0:
+            continue
+        if kind == "hybrid_superblocks":
+            sb_p = params[f"blocks{si}"]
+            sb_c = cache[f"blocks{si}"]
+
+            def sb_body(x, pc):
+                layer_p, layer_c = pc
+                new_c = {}
+                for bi, bkind in enumerate(cfg.superblock):
+                    bk = "rec_mlp" if bkind == "rec" else "attn_local_mlp"
+                    key = f"b{bi}_{bkind}"
+                    x, c = _block_prefill(cfg, bk, layer_p[key], x, positions,
+                                          lengths, layer_c[key], S,
+                                          window=cfg.local_window)
+                    new_c[key] = c
+                return x, new_c
+
+            if scanned:
+                x, nc = jax.lax.scan(sb_body, x, (sb_p, sb_c))
+            else:
+                ncs = []
+                for j in range(count):
+                    x, c = sb_body(x, jax.tree.map(lambda t: t[j], (sb_p, sb_c)))
+                    ncs.append(c)
+                nc = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+            new_cache[f"blocks{si}"] = nc
+        elif kind == "hybrid_tail":
+            for bi, bkind in enumerate(cfg.tail_blocks):
+                bk = "rec_mlp" if bkind == "rec" else "attn_local_mlp"
+                x, c = _block_prefill(cfg, bk, params[f"tail{bi}"], x,
+                                      positions, lengths, cache[f"tail{bi}"],
+                                      S, window=cfg.local_window)
+                new_cache[f"tail{bi}"] = c
+        else:
+            def body(x, pc, _kind=kind):
+                layer_p, layer_c = pc
+                return _block_prefill(cfg, _kind, layer_p, x, positions,
+                                      lengths, layer_c, S,
+                                      tree_mask=tree_mask)
+
+            if scanned:
+                x, nc = jax.lax.scan(body, x, (params[f"blocks{si}"],
+                                               cache[f"blocks{si}"]))
+            else:
+                ncs = []
+                for j in range(count):
+                    x, c = body(x, jax.tree.map(
+                        lambda t: t[j], (params[f"blocks{si}"],
+                                         cache[f"blocks{si}"])))
+                    ncs.append(c)
+                nc = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+            new_cache[f"blocks{si}"] = nc
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps, plus_one=True)
+    last = jnp.clip(lengths - 1, 0, Lp - 1)
+    x_last = x[jnp.arange(B), last][:, None, :]  # (B, 1, d)
+    logits = unembed(cfg, params, x_last)[:, 0]
     return logits, new_cache

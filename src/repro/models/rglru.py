@@ -74,6 +74,40 @@ def lru_block_train(cfg, p, x):
     return y @ p["out_proj"]
 
 
+def lru_block_prefill(cfg, p, x, lengths, cache):
+    """Fused prefill: one RG-LRU scan over the (right-padded) prompt that
+    also yields the decode state. Padded positions are neutralized by
+    forcing r = i = 0 there (a = 1, input contribution exactly 0 — the
+    recurrence passes through), so the final state equals the state after
+    each row's last real token. Rows with lengths[b] == 0 are untouched."""
+    B, L, _ = x.shape
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, ("batch", "seq", "inner"))
+    xc = _conv1d(xin, p["conv_w"], p["conv_b"])
+    g = xc @ p["gates"]
+    r, i = jnp.split(jax.nn.sigmoid(g.astype(jnp.float32)), 2, axis=-1)
+    vmask = (jnp.arange(L)[None, :] < lengths[:, None]
+             ).astype(jnp.float32)[..., None]
+    r = r * vmask
+    i = i * vmask
+    h, h_fin = _rglru_scan(xc.astype(jnp.float32), r, i,
+                           p["a_param"].astype(jnp.float32))
+    y = (h.astype(x.dtype) * jax.nn.gelu(z)) @ p["out_proj"]
+    K = p["conv_w"].shape[1]
+    cidx = lengths[:, None] - (K - 1) + jnp.arange(K - 1)[None, :]
+    cvalid = cidx >= 0
+    rows = jnp.arange(B)[:, None]
+    conv = jnp.where(cvalid[..., None],
+                     xin[rows, jnp.clip(cidx, 0, max(L - 1, 0))],
+                     0.0).astype(cache["conv"].dtype)
+    valid = lengths > 0
+    return y, {
+        "conv": jnp.where(valid[:, None, None], conv, cache["conv"]),
+        "h": jnp.where(valid[:, None], h_fin, cache["h"]),
+    }
+
+
 def lru_decode_init(cfg, B, dtype=jnp.float32):
     w, K = cfg.lru_width, 4
     return {"conv": jnp.zeros((B, K - 1, w), dtype),

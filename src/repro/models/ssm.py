@@ -104,6 +104,49 @@ def mamba_block_train(cfg, p, x, cache=None):
     return y @ p["out_proj"]
 
 
+def mamba_block_prefill(cfg, p, x, lengths, cache):
+    """Fused prefill: one selective scan over the (right-padded) prompt that
+    also produces the decode state. Padded positions are neutralized through
+    dt = 0 (dA = 1, dBu = 0 — the state passes through unchanged), so
+    h_final is exactly the state after the last REAL token of each row. The
+    conv ring holds the last K-1 real conv inputs (zeros where the prompt is
+    shorter, matching `mamba_decode_init`). Rows with lengths[b] == 0 keep
+    their cache untouched. Returns (y (B, L, d_model-in), new_cache)."""
+    B, L, _ = x.shape
+    din = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, ("batch", "seq", "inner"))
+    xc = _causal_conv1d(xin, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt_rank = p["dt_proj"].shape[0]
+    N = cfg.ssm_state
+    proj = xc @ p["x_proj"]
+    dt_low, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"] + p["dt_bias"])
+    vmask = (jnp.arange(L)[None, :] < lengths[:, None])
+    dt = dt * vmask[..., None].astype(dt.dtype)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h = selective_scan(xc.astype(jnp.float32), dt.astype(jnp.float32), A,
+                          Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                          p["D"].astype(jnp.float32))
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = y @ p["out_proj"]
+    # conv ring: raw xin at positions [len-K+1, len), zeros where negative
+    K = cfg.ssm_conv
+    cidx = lengths[:, None] - (K - 1) + jnp.arange(K - 1)[None, :]  # (B,K-1)
+    cvalid = cidx >= 0
+    rows = jnp.arange(B)[:, None]
+    conv = jnp.where(cvalid[..., None],
+                     xin[rows, jnp.clip(cidx, 0, max(L - 1, 0))],
+                     0.0).astype(cache["conv"].dtype)
+    valid = lengths > 0
+    return y, {
+        "conv": jnp.where(valid[:, None, None], conv, cache["conv"]),
+        "h": jnp.where(valid[:, None, None], h, cache["h"]),
+    }
+
+
 def mamba_decode_init(cfg, B, dtype=jnp.float32):
     din, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
     return {

@@ -14,10 +14,17 @@ Fault points currently wired:
                         simulates a kernel compile/launch failure
   ladder.out.<level>    transforms that level's output field — returning
                         NaNs simulates a numerically-broken kernel
-  serve.step            fired at the top of every ServeEngine tick with
+  serve.step            fired before every ServeEngine batched decode with
                         tick=<int> — raising simulates a decode-step crash
-  serve.logits          transforms the per-tick (B, V) numpy logits with
-                        tick=<int> — NaN rows simulate per-slot corruption
+  serve.logits          transforms the per-tick decode (B, V) numpy logits
+                        with tick=<int> — NaN rows simulate per-slot
+                        corruption
+  serve.prefill         fired before a fused prefill-into-cache call with
+                        tick=<int> — raising simulates a prefill crash
+                        (the admitted group is evicted and re-queued)
+  serve.prefill_logits  transforms the fused-prefill (B, V) numpy logits
+                        with tick=<int> — NaN rows simulate per-slot
+                        prefill corruption
 
 Helpers below build the common fault shapes: `raise_at_tick`,
 `nan_slot_at_tick`, `corrupt_file` (bit flips / truncation for artifact

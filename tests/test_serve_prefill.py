@@ -1,0 +1,353 @@
+"""Fused prefill-into-cache + forest-masked continuous batching.
+
+Covers the serving tentpole: (a) fused prefill is bit-identical to the
+legacy decode-replay path under greedy argmax; (b) mid-wave admission into
+freed slots reproduces single-slot outputs exactly (per-slot decode
+positions); (c) faults in the fused prefill path retry deterministically;
+(d) the silent-truncation and hung-request bugs stay fixed (truncated
+marker, "engine stopped" errors); (e) per-request topological masks served
+from ONE packed forest plan match per-request plans, across admission
+repacks and incremental evictions, with every swap plan-guard validated.
+"""
+import numpy as np
+import pytest
+import jax
+
+from repro.configs.base import get_smoke_config
+from repro.core import plan_guard
+from repro.core.masks import make_tree_fastmult
+from repro.graphs.graph import random_tree
+from repro.models import api
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.forest_masks import ForestMaskManager, PlanRegistry
+from repro.testing import faults
+
+
+@pytest.fixture(autouse=True)
+def _disarm_faults():
+    faults.clear()
+    yield
+    faults.clear()
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_smoke_config("qwen2_1_5b").replace(dtype="float32")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(n)).tolist()
+               for n in (3, 7, 5, 4, 6)]
+    return cfg, params, prompts
+
+
+@pytest.fixture(scope="module")
+def topo_setup():
+    cfg = get_smoke_config("qwen2_1_5b").replace(
+        dtype="float32", attention_variant="topo")
+    params = api.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(n)).tolist()
+               for n in (5, 7)]
+    trees = [random_tree(len(p), seed=i) for i, p in enumerate(prompts)]
+    return cfg, params, prompts, trees
+
+
+def _serve(cfg, params, reqs, **kw):
+    eng = ServeEngine(cfg, params, **kw)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return eng
+
+
+# ----------------------------------------------------------------------------
+# fused prefill == replay
+# ----------------------------------------------------------------------------
+
+
+def test_fused_matches_replay_bit_identical(dense_setup):
+    cfg, params, prompts = dense_setup
+    fused = [Request(rid=i, prompt=p, max_new_tokens=4)
+             for i, p in enumerate(prompts[:3])]
+    replay = [Request(rid=i, prompt=p, max_new_tokens=4)
+              for i, p in enumerate(prompts[:3])]
+    ef = _serve(cfg, params, fused, batch_slots=3, max_len=64,
+                prefill_mode="fused")
+    er = _serve(cfg, params, replay, batch_slots=3, max_len=64,
+                prefill_mode="replay")
+    for f, r in zip(fused, replay):
+        assert f.done and f.error is None
+        assert f.out == r.out  # greedy argmax: bit-identical token streams
+    assert ef.stats()["prefill_calls"] >= 1
+    assert ef.stats()["prefill_tokens"] == sum(len(p) for p in prompts[:3])
+    assert er.stats()["prefill_calls"] == 0
+
+
+def test_mid_wave_admission_matches_single_slot(dense_setup):
+    """Five mixed-length prompts with staggered budgets through 2 slots:
+    later requests admit mid-wave into whichever slot frees first, each
+    decoding at its OWN position. Outputs must equal the single-slot runs."""
+    cfg, params, prompts = dense_setup
+    budgets = [4, 8, 4, 6, 3]
+    refs = []
+    for p, mn in zip(prompts, budgets):
+        r = Request(rid=0, prompt=p, max_new_tokens=mn)
+        _serve(cfg, params, [r], batch_slots=1, max_len=64)
+        refs.append(list(r.out))
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=mn)
+            for i, (p, mn) in enumerate(zip(prompts, budgets))]
+    eng = _serve(cfg, params, reqs, batch_slots=2, max_len=64)
+    for r, ref in zip(reqs, refs):
+        assert r.done and r.error is None
+        assert r.out == ref
+    st = eng.stats()
+    assert st["completed"] == 5 and st["failed"] == 0
+    # staggered budgets force at least one admission into a mid-wave batch
+    assert st["prefill_calls"] >= 3
+
+
+def test_eos_as_first_generated_token(dense_setup):
+    cfg, params, prompts = dense_setup
+    probe = Request(rid=0, prompt=prompts[0], max_new_tokens=1)
+    _serve(cfg, params, [probe], batch_slots=1, max_len=64)
+    first = probe.out[0]
+    r = Request(rid=0, prompt=prompts[0], max_new_tokens=8)
+    eng = _serve(cfg, params, [r], batch_slots=1, max_len=64, eos_id=first)
+    assert r.done and r.error is None and not r.truncated
+    assert r.out == [first]  # EOS straight out of prefill: no decode ticks
+    assert eng.stats()["completed"] == 1
+    assert eng.stats()["decode_tokens"] == 0
+
+
+# ----------------------------------------------------------------------------
+# fault containment through the fused path
+# ----------------------------------------------------------------------------
+
+
+def test_prefill_crash_requeues_group_deterministically(dense_setup):
+    cfg, params, prompts = dense_setup
+    ref = Request(rid=0, prompt=prompts[0], max_new_tokens=4)
+    _serve(cfg, params, [ref], batch_slots=1, max_len=64)
+    r = Request(rid=0, prompt=prompts[0], max_new_tokens=4)
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=64)
+    eng.submit(r)
+    with faults.injected("serve.prefill", faults.raise_at_tick(1)):
+        eng.run()
+    st = eng.stats()
+    assert r.done and r.error is None
+    assert r.out == ref.out  # retried through prefill, bit-identical
+    assert st["prefill_failures"] == 1 and st["retries"] == 1
+    assert st["failed"] == 0
+
+
+def test_nonfinite_prefill_logits_evict_only_that_slot(dense_setup):
+    cfg, params, prompts = dense_setup
+    refs = []
+    for p in prompts[:2]:
+        r = Request(rid=0, prompt=p, max_new_tokens=4)
+        _serve(cfg, params, [r], batch_slots=1, max_len=64)
+        refs.append(list(r.out))
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts[:2])]
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64)
+    for r in reqs:
+        eng.submit(r)
+    with faults.injected("serve.prefill_logits",
+                         faults.nan_slot_at_tick(slot=1, k=1)):
+        eng.run()
+    st = eng.stats()
+    assert all(r.done and r.error is None for r in reqs)
+    assert reqs[0].retries == 0 and reqs[1].retries == 1
+    for r, ref in zip(reqs, refs):
+        assert r.out == ref
+    assert st["slot_faults"] == 1 and st["failed"] == 0
+
+
+# ----------------------------------------------------------------------------
+# silent truncation + hung requests (the bugfixes)
+# ----------------------------------------------------------------------------
+
+
+def test_cache_bound_truncation_is_marked(dense_setup):
+    cfg, params, prompts = dense_setup
+    S = 16
+    r = Request(rid=0, prompt=prompts[1], max_new_tokens=32)  # 7 + 32 > 16
+    eng = _serve(cfg, params, [r], batch_slots=1, max_len=S)
+    assert r.done and r.error is None
+    assert r.truncated is True
+    assert len(r.out) == S - 1 - len(r.prompt) + 1  # stopped at the bound
+    assert len(r.out) < r.max_new_tokens
+    st = eng.stats()
+    assert st["truncated"] == 1 and st["completed"] == 1
+    assert "truncated=1" in eng.health_banner()
+
+
+def test_full_answers_are_not_marked_truncated(dense_setup):
+    cfg, params, prompts = dense_setup
+    r = Request(rid=0, prompt=prompts[0], max_new_tokens=4)
+    eng = _serve(cfg, params, [r], batch_slots=1, max_len=64)
+    assert r.done and not r.truncated and eng.stats()["truncated"] == 0
+
+
+def test_run_exhaustion_fails_inflight_and_queued(dense_setup):
+    cfg, params, prompts = dense_setup
+    inflight = Request(rid=0, prompt=prompts[0], max_new_tokens=32)
+    queued = Request(rid=1, prompt=prompts[1], max_new_tokens=32)
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=64)
+    eng.submit(inflight)
+    eng.submit(queued)
+    eng.run(max_ticks=2)
+    for r in (inflight, queued):
+        assert r.done and r.error is not None
+        assert "engine stopped" in r.error and "max_ticks=2" in r.error
+    st = eng.stats()
+    assert st["stopped_inflight"] == 2 and st["failed"] == 2
+    assert "stopped=2" in eng.health_banner()
+    # the engine itself is still serviceable
+    again = Request(rid=2, prompt=prompts[0], max_new_tokens=4)
+    eng.submit(again)
+    eng.run()
+    assert again.done and again.error is None
+
+
+def test_oversized_prompt_fails_cleanly(dense_setup):
+    cfg, params, prompts = dense_setup
+    rng = np.random.default_rng(3)
+    big = Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, size=16).tolist(), max_new_tokens=4)
+    ok = Request(rid=1, prompt=prompts[0], max_new_tokens=4)
+    eng = _serve(cfg, params, [big, ok], batch_slots=1, max_len=16)
+    assert big.done and big.error is not None
+    assert "prompt length 16 >= max_len 16" in big.error
+    assert ok.done and ok.error is None
+    assert eng.stats()["failed"] == 1 and eng.stats()["completed"] == 1
+
+
+# ----------------------------------------------------------------------------
+# forest-masked serving
+# ----------------------------------------------------------------------------
+
+
+def test_forest_packed_vs_per_request_plan_parity(topo_setup):
+    """ONE packed two-tree forest prefill must match two per-request
+    single-tree prefills to numerical noise (block-diagonal mask: zero
+    cross-tree coupling)."""
+    cfg, params, prompts, trees = topo_setup
+    S, Lp, B = 32, 8, 2
+
+    def masked_prefill(mgr, slots, batch, toks, lens):
+        pack, unpack = mgr.pack_maps(Lp, slots, batch)
+        tree_mask = {
+            "make_fastmult": lambda coeffs: make_tree_fastmult(
+                (mgr.spec, mgr.params), cfg.topo_g, coeffs,
+                cfg.topo_dist_scale),
+            "pack": jax.numpy.asarray(pack),
+            "unpack": jax.numpy.asarray(unpack),
+        }
+        cache = api.init_cache(cfg, batch, S)
+        logits, _ = api.prefill_into_cache(
+            cfg, params, cache, jax.numpy.asarray(toks),
+            jax.numpy.asarray(lens), S, tree_mask=tree_mask)
+        return np.asarray(logits, np.float64)
+
+    mgr = ForestMaskManager(B, leaf_size=4)
+    mgr.admit(0, trees[0])
+    mgr.admit(1, trees[1])
+    toks = np.zeros((B, Lp), np.int32)
+    lens = np.zeros((B,), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+        lens[i] = len(p)
+    packed = masked_prefill(mgr, [0, 1], B, toks, lens)
+    for i, (p, t) in enumerate(zip(prompts, trees)):
+        solo = ForestMaskManager(1, leaf_size=4)
+        solo.admit(0, t)
+        st = np.zeros((1, Lp), np.int32)
+        st[0, :len(p)] = p
+        single = masked_prefill(solo, [0], 1, st,
+                                np.asarray([len(p)], np.int32))
+        err = (np.max(np.abs(packed[i] - single[0]))
+               / max(np.max(np.abs(single[0])), 1e-12))
+        assert err <= 1e-5, f"row {i}: packed-vs-solo rel_err {err:.2e}"
+    assert mgr.stats["swaps_validated"] >= 2
+
+
+def test_tree_masked_serving_end_to_end(topo_setup):
+    """Tree-masked requests through the engine: single-slot vs batched-
+    with-membership-churn produce identical greedy tokens, and every plan
+    swap went through the guard."""
+    cfg, params, prompts, trees = topo_setup
+    refs = []
+    for p, t in zip(prompts, trees):
+        r = Request(rid=0, prompt=p, max_new_tokens=4, tree=t)
+        _serve(cfg, params, [r], batch_slots=1, max_len=32)
+        refs.append(list(r.out))
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=mn, tree=t)
+            for i, (p, t, mn) in enumerate(zip(prompts, trees, (3, 4)))]
+    eng = _serve(cfg, params, reqs, batch_slots=2, max_len=32)
+    for r, ref in zip(reqs, refs):
+        assert r.done and r.error is None
+        assert r.out == ref[:r.max_new_tokens]
+    fm = eng.stats()["forest_masks"]
+    assert fm["builds"] >= 1 and fm["swaps_validated"] >= fm["builds"]
+
+
+def test_mask_manager_incremental_eviction():
+    trees = [random_tree(n, seed=n) for n in (5, 7, 6)]
+    mgr = ForestMaskManager(3, leaf_size=4)
+    for s, t in enumerate(trees):
+        mgr.admit(s, t)
+    offsets_before = mgr.slot_offset.copy()
+    mgr.evict(1)
+    assert mgr.stats["incremental_evictions"] == 1
+    assert plan_guard.check_spec(mgr.spec, mgr.params) == []
+    # survivors keep their packed offsets (ghost rows stay allocated)
+    assert mgr.slot_offset[0] == offsets_before[0]
+    assert mgr.slot_offset[2] == offsets_before[2]
+    assert mgr.slot_offset[1] == -1
+    ghosts = mgr.spec.ghosts
+    assert ghosts is not None and len(ghosts) == trees[1].num_vertices - 1
+    pack, unpack = mgr.pack_maps(8, [0, 2], 3)
+    assert (pack >= 0).sum() == trees[0].num_vertices + trees[2].num_vertices
+    mgr.evict(0)
+    mgr.evict(2)
+    assert mgr.spec is None and not mgr.any_active()
+
+
+def test_plan_registry_roundtrip_and_sha_serving(tmp_path, topo_setup):
+    cfg, params, prompts, trees = topo_setup
+    reg = PlanRegistry(tmp_path / "reg", leaf_size=4)
+    sha = reg.put(trees[0])
+    assert reg.put(trees[0]) == sha  # idempotent
+    spec, pp = reg.resolve(sha)  # validated load
+    assert spec.fingerprint[:12] == sha
+    t2 = reg.resolve_tree(sha)
+    assert t2.num_vertices == trees[0].num_vertices
+    by_tree = Request(rid=0, prompt=prompts[0], max_new_tokens=4,
+                      tree=trees[0])
+    _serve(cfg, params, [by_tree], batch_slots=1, max_len=32)
+    by_sha = Request(rid=0, prompt=prompts[0], max_new_tokens=4,
+                     plan_sha=sha)
+    _serve(cfg, params, [by_sha], batch_slots=1, max_len=32,
+           registry=str(tmp_path / "reg"))
+    assert by_sha.done and by_sha.error is None
+    assert by_sha.out == by_tree.out
+
+
+def test_tree_request_rejected_on_non_topo_engine(dense_setup):
+    cfg, params, prompts = dense_setup
+    r = Request(rid=0, prompt=prompts[0], max_new_tokens=4,
+                tree=random_tree(len(prompts[0]), seed=0))
+    eng = _serve(cfg, params, [r], batch_slots=1, max_len=32)
+    assert r.done and r.error is not None
+    assert "attention_variant='topo'" in r.error
+    assert eng.stats()["failed"] == 1
+
+
+def test_plan_sha_without_registry_rejected(topo_setup):
+    cfg, params, prompts, _ = topo_setup
+    r = Request(rid=0, prompt=prompts[0], max_new_tokens=4,
+                plan_sha="deadbeef0123")
+    eng = _serve(cfg, params, [r], batch_slots=1, max_len=32)
+    assert r.done and "no plan registry" in r.error
+    assert eng.stats()["failed"] == 1

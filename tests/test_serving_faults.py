@@ -312,9 +312,10 @@ def serve_setup():
 
 
 def test_mixed_length_waves_match_reference(serve_setup):
-    """Satellite regression: a freed slot must NOT admit mid-wave (the new
-    request would attend to the previous request's KV cache). Three
-    mixed-length prompts through 2 slots == their single-slot outputs."""
+    """Batch-size independence: three mixed-length prompts through 2 slots
+    (the third admits MID-WAVE into whichever slot frees first — legal under
+    fused prefill + per-slot decode positions) must reproduce their
+    single-slot outputs exactly."""
     cfg, params, prompts, refs = serve_setup
     eng = ServeEngine(cfg, params, batch_slots=2, max_len=64)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
