@@ -1,0 +1,23 @@
+"""Static analysis for the FTFI repo: jaxpr auditor, retrace sentinel,
+AST lint.  ``python -m repro.analysis --all`` runs every pass and diffs
+against ``ANALYSIS_BUDGETS.json``.
+
+``trace_guard`` is imported eagerly (pure stdlib — core modules hook into
+it at import time); the jax-heavy passes load lazily so ``import
+repro.core`` never pays for them.
+"""
+from repro.analysis import trace_guard  # noqa: F401  (light, eager)
+
+_LAZY = ("jaxpr_audit", "lint", "entry_points", "runner")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f"repro.analysis.{name}")
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+
+
+__all__ = ["trace_guard", *_LAZY]

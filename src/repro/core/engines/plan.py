@@ -19,6 +19,7 @@ from __future__ import annotations
 
 from typing import Callable
 
+from repro.analysis import trace_guard
 from repro.core import plan_api
 from repro.core.engines.base import register_backend
 from repro.core.engines.spec import FamilySpec, spec_of
@@ -91,16 +92,18 @@ class _PlanFastMult:
     cache exists for."""
 
     def __init__(self, eager: Callable, jit_compile: bool):
+        import jax
+
         self.trace_count = 0
         self.jitted = bool(jit_compile)
 
         def counted(X):
             self.trace_count += 1
+            if isinstance(X, jax.core.Tracer):  # compile, not an eager call
+                trace_guard.record("engines.plan.fastmult")
             return eager(X)
 
         if jit_compile:
-            import jax
-
             self._call = jax.jit(counted)
         else:
             self._call = counted

@@ -275,8 +275,11 @@ def _upd_tables(flat, job_bucket, job_row, leaf_bucket, leaf_row) -> dict:
     vertex's IT chain and patch the affected slots in place."""
     root_refs = (flat.root_refs if flat.root_refs is not None
                  else np.array([flat.root_ref], np.int64))
-    return {"children": flat.children.astype(np.int64),
-            "root_refs": np.asarray(root_refs, np.int64),
+    # int32 end-to-end: node refs are bounded by the node count, and every
+    # other PlanSpec index array is already int32 — int64 here doubled the
+    # artifact/update-table footprint for nothing (caught by repro.analysis)
+    return {"children": flat.children.astype(np.int32),
+            "root_refs": np.asarray(root_refs).astype(np.int32),
             "job_bucket": np.asarray(job_bucket, np.int32),
             "job_row": np.asarray(job_row, np.int32),
             "leaf_bucket": np.asarray(leaf_bucket, np.int32),

@@ -22,6 +22,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import trace_guard
 from repro.core.lru import BoundedLRU
 from repro.core.toeplitz import causal_toeplitz_matvec, symmetric_toeplitz_matvec
 
@@ -257,7 +258,9 @@ def make_tree_fastmult(integrator, g: str, coeffs,
                id(mesh) if use_shard else 0)
         hit = _TREE_FM_CACHE.get(key)
         if hit is not None and hit[1]() is ref_target:
+            trace_guard.record("masks.tree_fastmult", event="hit")
             return hit[0]
+        trace_guard.record("masks.tree_fastmult", event="miss")
     f_eval = mask_f(g, coeffs, dist_scale)
     if use_shard:
         # multi-device path: shard_map executor over the mesh; the closure

@@ -46,6 +46,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import trace_guard
 from repro.core.engines.spec import FamilySpec, spec_of
 from repro.core.integrate import (CrossBucket, IntegrationPlan, LeafBucket,
                                   compile_forest_plan, compile_plan)
@@ -55,7 +56,10 @@ KERNEL_MODES = ("poly", "exp", "expq", "rational")
 _SAVE_VERSION = 1
 # PlanSpec field-layout generation, mixed into disk-cache keys (NOT the npz
 # version: old artifacts still load — absent fields default to None)
-_SPEC_SCHEMA = 3
+# 4: update tables (children/root_refs) are int32 like every other index
+#    array — bumping the schema misses stale disk-cache entries so they
+#    rebuild in canonical form instead of round-tripping int64
+_SPEC_SCHEMA = 4
 
 
 # ----------------------------------------------------------------------------
@@ -639,6 +643,9 @@ def fastmult(spec: PlanSpec, fn, *, backend: str = "plan", degree: int = 32,
     fe = fspec.fn_eval
 
     def fm(params, X):
+        if isinstance(X, jax.core.Tracer):
+            # trace-time only: one record per compile, none per cached call
+            trace_guard.record("ftfi.fastmult", detail=spec.digest[:12])
         return _execute(spec, params, fe, cross, X)
 
     return fm
@@ -832,9 +839,12 @@ def load_plan(path, validate: bool = True):
         raise PlanValidationError(
             f"load_plan({path!s}): corrupt or truncated plan artifact "
             f"({type(e).__name__}: {e})") from e
-    if validate:
-        from repro.core import plan_guard
+    # canonicalize dtype drift from older artifacts (schema <= 3 saved the
+    # update tables as int64): bounds-guarded downcast, never silent wrap
+    from repro.core import plan_guard
 
+    spec, _coerced = plan_guard.coerce_index_dtypes(spec)
+    if validate:
         plan_guard.validate(spec, params, where=f"load_plan({path!s})")
     return spec, params
 

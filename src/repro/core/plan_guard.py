@@ -73,6 +73,95 @@ def reset_stats() -> None:
 # checks (pure: return a list of issue strings, never raise)
 # ----------------------------------------------------------------------------
 
+# Every integer index array on a PlanSpec, by field kind. The executor and
+# the update/reweight paths address at most n+1 <= 2^31 rows, so these are
+# int32 end-to-end — int64 doubles artifact size and device transfer for
+# nothing (the dtype-discipline check below and `repro.analysis` both gate
+# on it).
+_INDEX_FIELDS = (
+    "pivots", "src_gather", "src_seg", "tgt_gather", "tgt_scatter",
+    "children", "root_refs", "job_bucket", "job_row", "leaf_bucket",
+    "leaf_row", "path_rows", "path_edges", "ghosts", "edges_u", "edges_v",
+)
+_INDEX_TUPLE_FIELDS = (
+    "leaf_ids", "cross_piv", "cross_tgt_rep", "cross_tgt_lca",
+    "cross_src_rep", "cross_src_lca", "leaf_lca",
+)
+
+
+def _iter_index_arrays(spec):
+    """Yield (field_name, array) for every index array on the spec."""
+    for name in _INDEX_FIELDS:
+        a = getattr(spec, name, None)
+        if a is not None:
+            yield name, a
+    for name in _INDEX_TUPLE_FIELDS:
+        val = getattr(spec, name, None)
+        if val is None:
+            continue
+        for i, a in enumerate(val):
+            yield f"{name}[{i}]", a
+
+
+def check_index_dtypes(spec) -> list[str]:
+    """Flag any integer index array that is not int32 (dtype discipline)."""
+    issues = []
+    for name, a in _iter_index_arrays(spec):
+        a = np.asarray(a)
+        if np.issubdtype(a.dtype, np.integer) and a.dtype != np.int32:
+            issues.append(f"{name}: index array dtype {a.dtype}, expected "
+                          f"int32 (wastes memory/bandwidth end-to-end)")
+    return issues
+
+
+def coerce_index_dtypes(spec):
+    """Downcast non-int32 integer index arrays to int32, bounds-guarded.
+
+    Returns ``(new_spec, coerced_field_names)``; raises
+    :class:`PlanValidationError` if any value does not fit in int32 (a
+    corrupt artifact, not a dtype drift). Used by `load_plan` so pre-schema-4
+    artifacts (which saved int64 update tables) land in canonical form."""
+    import dataclasses
+
+    i32 = np.iinfo(np.int32)
+    replace: dict = {}
+    coerced: list[str] = []
+
+    def fix(name, a):
+        a = np.asarray(a)
+        if not np.issubdtype(a.dtype, np.integer) or a.dtype == np.int32:
+            return a, False
+        if a.size and (int(a.min()) < i32.min or int(a.max()) > i32.max):
+            raise PlanValidationError(
+                f"{name}: index values span [{a.min()}, {a.max()}], which "
+                f"does not fit int32 — refusing to downcast a corrupt "
+                f"artifact")
+        return a.astype(np.int32), True
+
+    for name in _INDEX_FIELDS:
+        a = getattr(spec, name, None)
+        if a is None:
+            continue
+        b, did = fix(name, a)
+        if did:
+            replace[name] = b
+            coerced.append(name)
+    for name in _INDEX_TUPLE_FIELDS:
+        val = getattr(spec, name, None)
+        if val is None:
+            continue
+        out, any_did = [], False
+        for i, a in enumerate(val):
+            b, did = fix(f"{name}[{i}]", a)
+            out.append(b)
+            any_did = any_did or did
+        if any_did:
+            replace[name] = tuple(out)
+            coerced.append(name)
+    if not replace:
+        return spec, []
+    return dataclasses.replace(spec, **replace), coerced
+
 
 def _idx_in(name, arr, lo, hi, issues):
     """All entries of integer array `arr` in [lo, hi)? One min/max pass."""
@@ -203,6 +292,11 @@ def check_spec(spec, params=None, max_issues: int = 16) -> list[str]:
                 spec.n_src_groups, issues)
     _offsets_ok("cross_tgt_off", spec.cross_tgt_off, spec.cross_tgt_mask,
                 spec.n_tgt_groups, issues)
+    if done():
+        return issues
+
+    # -- index dtype discipline: int32 end-to-end ---------------------------
+    issues.extend(check_index_dtypes(spec))
     if done():
         return issues
 

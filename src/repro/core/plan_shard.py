@@ -595,6 +595,11 @@ def sharded_fastmult(spec: PlanSpec, fn, *, mesh, axis: str | None = None,
     and engine choice baked in (the sharded face of `plan_api.fastmult`)."""
 
     def fm(params, X):
+        if isinstance(X, jax.core.Tracer):
+            from repro.analysis import trace_guard
+
+            trace_guard.record("ftfi.sharded_fastmult",
+                               detail=spec.digest[:12])
         return apply_sharded(spec, params, fn, X, mesh=mesh, axis=axis,
                              backend=backend, degree=degree,
                              pallas_opts=pallas_opts)

@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import trace_guard
 from repro.models import api
 from repro.serve.forest_masks import ForestMaskManager, PlanRegistry
 from repro.testing import faults
@@ -155,16 +156,25 @@ class ServeEngine:
         self.cache = api.init_cache(cfg, self.B, self.S)
         self.slot_req: list[Request | None] = [None] * self.B
         self.slot_pos = np.zeros(self.B, dtype=np.int64)
-        self._decode = jax.jit(
-            lambda params, cache, tok, pos: api.decode_fn(
-                cfg, params, cache, tok, pos, self.S))
-        self._prefill = jax.jit(
-            lambda params, cache, tokens, lengths: api.prefill_into_cache(
-                cfg, params, cache, tokens, lengths, self.S))
+        def _decode_fn(params, cache, tok, pos):
+            trace_guard.record("serve.decode")  # body runs only on compile
+            return api.decode_fn(cfg, params, cache, tok, pos, self.S)
+
+        def _prefill_fn(params, cache, tokens, lengths):
+            # one compile per pow2 prompt bucket, then shape-stable
+            trace_guard.record("serve.prefill", detail=f"L{tokens.shape[1]}")
+            return api.prefill_into_cache(cfg, params, cache, tokens,
+                                          lengths, self.S)
+
+        self._decode = jax.jit(_decode_fn)
+        self._prefill = jax.jit(_prefill_fn)
 
         def _prefill_tree_fn(params, cache, tokens, lengths, spec, pp,
                              pack, unpack):
             from repro.core import masks as M
+
+            trace_guard.record("serve.prefill_tree",
+                               detail=f"L{tokens.shape[1]}")
 
             tree_mask = {
                 "make_fastmult": lambda coeffs: M.make_tree_fastmult(

@@ -118,10 +118,15 @@ cfg_s = cfg.replace(topo_shard_plan=True)
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 with SH.use_sharding(mesh):
     fwd = lambda p, x: vit.forward(cfg_s, p, x, integ)
-    txt = str(jax.make_jaxpr(fwd)(params, patches))
-    assert "shard_map" in txt, "topo path not under shard_map"
-    assert "reduce_scatter" in txt and "all_to_all" in txt
-    assert "all_gather" not in txt, "forward gathers a full array"
+    # structured census (repro.analysis): each of the 2 layers runs 2 mask
+    # fastmults (numerator + denominator), each with the two-collective
+    # discipline — and never an all_gather of the field or the index arrays
+    from repro.analysis import jaxpr_audit
+    rep = jaxpr_audit.assert_clean(
+        fwd, params, patches, name="topovit.sharded",
+        budget={"collectives": {"all_to_all": 4, "psum_scatter": 4}})
+    assert rep.collectives == {"all_to_all": 4, "reduce_scatter": 4}, rep.collectives
+    assert rep.prim_counts.get("shard_map", 0) >= 1, "topo path not under shard_map"
     patches_s = jax.device_put(
         patches, NamedSharding(mesh, P("data", None, None)))
     out = jax.jit(fwd)(params, patches_s)

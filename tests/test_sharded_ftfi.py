@@ -103,11 +103,14 @@ t = random_tree(120, seed=1)
 spec, params = ftfi.build(t)
 X = rng.randn(120, 2).astype(np.float32)
 fm = ftfi.sharded_fastmult(spec, C.Exponential(-0.5), mesh=mesh)
-txt = str(jax.make_jaxpr(fm)(params, X))
-assert "shard_map" in txt
-assert "reduce_scatter" in txt, "psum_scatter missing from forward"
-assert "all_to_all" in txt, "halo exchange missing from forward"
-assert "all_gather" not in txt, "forward gathers a full array"
+# structured census over the walked jaxpr (not string matching): exactly
+# one halo all_to_all + one output psum_scatter, zero all_gather
+from repro.analysis import jaxpr_audit
+rep = jaxpr_audit.assert_clean(
+    fm, params, X, name="sharded_fastmult",
+    budget={"collectives": {"all_to_all": 1, "psum_scatter": 1}})
+assert rep.collectives == {"all_to_all": 1, "reduce_scatter": 1}, rep.collectives
+assert rep.prim_counts.get("shard_map", 0) >= 1, "not under shard_map"
 # grad still matches (the transpose MAY all-gather; only forward is gated)
 def loss_s(p, x):
     return jnp.sum(fm(p, x) ** 2)
